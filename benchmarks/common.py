@@ -1,0 +1,23 @@
+"""Shared benchmark plumbing: CSV emission + timing."""
+from __future__ import annotations
+
+import sys
+import time
+from contextlib import contextmanager
+from typing import Iterable
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+@contextmanager
+def timed():
+    t0 = time.perf_counter()
+    box = {}
+    yield box
+    box["us"] = (time.perf_counter() - t0) * 1e6
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)

@@ -1,0 +1,23 @@
+"""Fig. 4: HPC datacenter (LAN) bandwidth under two churn rates
+(S_avg = 174 min and 60 min)."""
+from repro.dht import ChurnConfig, LanDelay, run_churn
+
+from .common import emit, timed
+
+
+def run(full: bool = False) -> None:
+    sizes = [512, 1024, 2048, 4000] if full else [256, 512]
+    dur = 1200 if full else 600
+    for mins in (174, 60):
+        for proto in ("d1ht", "calot"):
+            for n in sizes:
+                with timed() as t:
+                    r = run_churn(ChurnConfig(
+                        n=n, s_avg=mins * 60, duration=dur, warmup=120,
+                        protocol=proto, delay=LanDelay(), seed=24))
+                emit(f"fig4/{mins}min/{proto}/n={n}", t["us"],
+                     f"sum_out={r.sum_out_bps/1e3:.1f}kbps "
+                     f"per_peer={r.mean_out_bps:.1f}bps "
+                     f"model={r.analytical_bps:.1f}bps "
+                     f"sim/model={r.mean_out_bps/r.analytical_bps:.2f} "
+                     f"one_hop={r.one_hop_fraction*100:.2f}%")

@@ -1,0 +1,16 @@
+"""Figs. 5-6: lookup latency — single-hop DHTs vs Pastry vs a directory
+server, idle and 100%-CPU nodes."""
+from repro.dht.latency import latency_sweep
+
+from .common import emit, timed
+
+
+def run(full: bool = False) -> None:
+    sizes = [800, 1600, 2400, 3200, 4000]
+    for busy in (False, True):
+        pts = latency_sweep(sizes, busy=busy, nodes=400)
+        for n, p in pts.items():
+            emit(f"fig5/{'busy' if busy else 'idle'}/n={n}", 0.0,
+                 f"d1ht={p.d1ht_ms:.3f}ms calot={p.calot_ms:.3f}ms "
+                 f"pastry={p.pastry_ms:.3f}ms dserver={p.dserver_ms:.3f}ms "
+                 f"dserver/d1ht={p.dserver_ms/p.d1ht_ms:.1f}x")

@@ -1,0 +1,23 @@
+"""Fig. 7: analytical per-peer maintenance bandwidth, D1HT vs 1h-Calot vs
+OneHop (best/worst roles), n = 1e4..1e7, four session lengths."""
+from repro.core import analysis as A
+from repro.core.tuning import SESSION_LENGTHS_MIN
+
+from .common import emit, timed
+
+
+def run(full: bool = False) -> None:
+    sizes = [10**4, 10**5, 10**6, 10**7]
+    for label, mins in sorted(SESSION_LENGTHS_MIN.items(),
+                              key=lambda kv: kv[1]):
+        s = mins * 60
+        for n in sizes:
+            with timed() as t:
+                d1 = A.d1ht_bandwidth(n, s)
+                ca = A.calot_bandwidth(n, s)
+                oh = A.onehop_bandwidth(n, s)
+            emit(f"fig7/{label}/n={n:.0e}", t["us"],
+                 f"d1ht={d1/1e3:.2f}kbps calot={ca/1e3:.2f}kbps "
+                 f"onehop_slice={oh.slice_leader_bps/1e3:.2f}kbps "
+                 f"onehop_ord={oh.ordinary_bps/1e3:.2f}kbps "
+                 f"calot/d1ht={ca/d1:.1f}x")

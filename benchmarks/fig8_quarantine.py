@@ -1,0 +1,14 @@
+"""Fig. 8: Quarantine overhead reduction vs system size (T_q = 10 min)."""
+from repro.core import analysis as A
+
+from .common import emit, timed
+
+
+def run(full: bool = False) -> None:
+    for label, s_min, vol in [("kad", 169, 0.24), ("gnutella", 174, 0.31)]:
+        for n in (10**4, 10**5, 10**6, 10**7):
+            with timed() as t:
+                red = A.quarantine_reduction(n, s_min * 60, vol)
+            emit(f"fig8/{label}/n={n:.0e}", t["us"],
+                 f"reduction={red*100:.1f}% (paper asymptote "
+                 f"{vol*100:.0f}%)")

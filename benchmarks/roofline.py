@@ -1,0 +1,99 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run.
+
+Reads results/dryrun.jsonl (written by repro.launch.dryrun) and derives,
+per cell on the single-pod 16x16 mesh:
+
+    compute term    = matmul_flops_per_device / peak_bf16
+    memory term     = hbm_bytes_per_device / hbm_bw
+    collective term = collective_bytes_per_device / (links * link_bw)
+
+plus MODEL_FLOPS = 6*N*D (6*N_active*D for MoE; decode D = batch tokens),
+the useful-compute ratio, the dominant term, and a one-line lever.
+
+Terms come from the loop-aware HLO analyzer (hlo_cost), NOT XLA's
+cost_analysis (which counts while bodies once — see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from .common import emit
+
+PEAK = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9         # B/s
+LINK_BW = 50e9         # B/s per ICI link
+LINKS = 2              # usable links per axis direction on a 2D torus slice
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.jsonl")
+
+LEVERS = {
+    "compute": "raise MXU utilization: fuse attention (Pallas), drop remat",
+    "memory": "keep flash tiles in VMEM (Pallas kernel), cut fp32 temps",
+    "collective": "re-map logical axes (less TP), overlap or shrink "
+                  "grad/dispatch reductions",
+}
+
+
+def load(path: str = RESULTS, tag: str = "baseline",
+         mesh: str = "16x16") -> List[Dict]:
+    recs = []
+    seen = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("tag") != tag or r.get("mesh") != mesh:
+                continue
+            if not r.get("ok"):
+                continue
+            seen[(r["arch"], r["shape"])] = r   # last record wins
+    return list(seen.values())
+
+
+def terms(rec: Dict) -> Dict[str, float]:
+    return {
+        "compute": rec["matmul_flops_per_device"] / PEAK,
+        "memory": rec["hbm_bytes_per_device"] / HBM_BW,
+        "collective": rec["collective_bytes_per_device"] / (LINKS * LINK_BW),
+    }
+
+
+def model_flops(rec: Dict) -> float:
+    n = rec["active_params"] or rec["params"]
+    mult = 6.0 if rec["mode"] == "train" else 2.0
+    return mult * n * rec["tokens"]
+
+
+def analyze_record(rec: Dict) -> Dict:
+    t = terms(rec)
+    dom = max(t, key=t.get)
+    mf = model_flops(rec)
+    hlo_total = rec["matmul_flops_per_device"] * rec["devices"]
+    return {
+        **t,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / max(hlo_total, 1.0),
+        "step_s_bound": max(t.values()),
+        "roofline_fraction": t["compute"] / max(max(t.values()), 1e-12),
+        "lever": LEVERS[dom],
+    }
+
+
+def run(full: bool = False) -> None:
+    recs = load()
+    if not recs:
+        emit("roofline/missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    for rec in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        a = analyze_record(rec)
+        emit(f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+             f"compute={a['compute']*1e3:.1f}ms memory={a['memory']*1e3:.1f}ms "
+             f"collective={a['collective']*1e3:.1f}ms dominant={a['dominant']} "
+             f"useful={a['useful_ratio']*100:.0f}% "
+             f"roofline_frac={a['roofline_fraction']*100:.1f}% "
+             f"mem/dev={rec['peak_memory_per_device']/2**30:.1f}GiB")

@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+from . import (fig3_planetlab_bw, fig4_hpc_bw, fig5_latency,
+               fig7_analytical, fig8_quarantine, roofline,
+               table_validation)
+from .common import header
+
+ALL = {
+    "fig3": fig3_planetlab_bw.run,
+    "fig4": fig4_hpc_bw.run,
+    "fig5": fig5_latency.run,
+    "fig7": fig7_analytical.run,
+    "fig8": fig8_quarantine.run,
+    "validation": table_validation.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slower DES runs)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(ALL))
+    args = ap.parse_args()
+    names = list(ALL) if not args.only else args.only.split(",")
+    header()
+    for name in names:
+        ALL[name](full=args.full)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Live D1HT cluster demo: churn, failure detection, elastic re-meshing.
+
+    PYTHONPATH=src python examples/dht_cluster.py
+"""
+import random
+
+from repro.core.ring import RoutingTable, build_ring
+from repro.core.tuning import EdraParams
+from repro.dht.d1ht_node import D1HTPeer
+from repro.dht.des import LanDelay, SimNet
+from repro.runtime import ElasticController, Membership, Placement
+
+N = 64
+net = SimNet(LanDelay(), seed=0)
+params = EdraParams.derive(N, 174 * 60)
+ids = list(build_ring(N, seed=0).ids)
+for pid in ids:
+    net.add_peer(D1HTPeer(pid, net, params))
+net.ring = RoutingTable(ids)
+rng = random.Random(1)
+for pid in ids:
+    p = net.peers[pid]
+    p.table = RoutingTable(ids)
+    net.schedule(rng.random() * params.theta, (lambda q: (lambda: q.start()))(p))
+net.run_until(30)
+
+# mirror protocol membership into the runtime control plane
+membership = Membership()
+for pid in ids:
+    membership.admit(pid, ("10.0.0.1", 1117))
+controller = ElasticController(membership, model_axis=4)
+print(f"cluster up: {membership.size()} nodes, "
+      f"mesh plan {controller.replan().data_axis}x4")
+
+# crash three nodes; EDRA disseminates, controller re-plans
+for victim in ids[10:13]:
+    net.peers[victim].stop(crash=True)
+    net.ring.remove(victim)
+    membership.fail(victim)
+net.run_until(net.now + 20 * params.theta)
+stale = sum(1 for pid in ids[13:20]
+            if any(v in net.peers[pid].table for v in ids[10:13]))
+plan = controller.plan
+print(f"after 3 crashes: peers with stale entries={stale}, "
+      f"new plan {plan.data_axis}x{plan.model_axis} "
+      f"(dropped {len(plan.dropped)})")
+
+placement = Placement(membership.table)
+print("placement balance:", placement.balance_stats(2048))
+print("expert shards for 32 experts over 4 EP groups:",
+      placement.expert_assignment(32, 4).tolist())

@@ -1,0 +1,63 @@
+"""Assigned architecture registry — exact configs from the public pool.
+
+Each entry provides the FULL config (used only via the dry-run:
+ShapeDtypeStruct, no allocation) and a ``smoke()`` reduction of the same
+family (small depth/width/experts/vocab) for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .base import ModelConfig, SHAPES, ShapeConfig
+
+ARCH_IDS = [
+    "whisper-small",
+    "qwen3-moe-235b-a22b",
+    "deepseek-v2-236b",
+    "nemotron-4-15b",
+    "internlm2-20b",
+    "qwen2.5-3b",
+    "command-r-35b",
+    "falcon-mamba-7b",
+    "zamba2-7b",
+    "internvl2-2b",
+]
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.smoke()
+
+
+def shape_cells(arch: str) -> List[ShapeConfig]:
+    """The shape suite for an arch, with the mandated skips applied."""
+    cfg = get_config(arch)
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.supports_long_context:
+            continue   # pure full-attention arch: noted skip (DESIGN.md §4)
+        out.append(s)
+    return out
+
+
+def skipped_cells(arch: str) -> List[str]:
+    cfg = get_config(arch)
+    if not cfg.supports_long_context:
+        return ["long_500k"]
+    return []
+
+
+def all_cells() -> List[tuple]:
+    cells = []
+    for a in ARCH_IDS:
+        for s in shape_cells(a):
+            cells.append((a, s.name))
+    return cells

@@ -1,0 +1,20 @@
+"""D1HT core — the paper's primary contribution.
+
+  ring       consistent-hashing identifier ring + full routing tables
+  edra       EDRA rules/tree (Rules 1-8, Theorems 1-2 machinery)
+  tuning     Eqs III.1, IV.1-IV.4 (Theta/E/T_avg self-tuning)
+  analysis   Eqs IV.5-IV.7 + 1h-Calot (VII.1) + OneHop + Quarantine models
+  quarantine Quarantine admission mechanism (§V)
+  jax_sim    vectorized JAX protocol simulator (claims C1/C5 at scale)
+"""
+from . import analysis, edra, quarantine, ring, tuning
+from .edra import Event, EventBuffer, dissemination_tree
+from .quarantine import QuarantineManager
+from .ring import RoutingTable, build_ring, hash_id, key_id, peer_id
+from .tuning import EdraParams
+
+__all__ = [
+    "analysis", "edra", "quarantine", "ring", "tuning",
+    "Event", "EventBuffer", "dissemination_tree", "QuarantineManager",
+    "RoutingTable", "build_ring", "hash_id", "key_id", "peer_id", "EdraParams",
+]

@@ -1,0 +1,229 @@
+"""Vectorized EDRA simulator (pure JAX).
+
+Simulates event dissemination over a D1HT ring at protocol granularity —
+per-event, per-peer acknowledge times following the *exact* EDRA tree
+(binomial offsets, per-hop interval flushes, message delays, Rule-8
+truncation) — without materializing individual messages.  Used to:
+
+  * measure the one-hop-lookup fraction under churn (paper claim C1),
+  * measure per-peer maintenance bandwidth and cross-validate the
+    analytical model, Eqs IV.5-IV.7 (claim C5),
+  * measure acknowledge-time statistics against the Theorem-1 bound.
+
+The protocol-faithful message-level implementation lives in repro.dht
+(discrete-event simulator); this module trades per-message fidelity for
+scale (10^4..10^5 peers in seconds on CPU).
+
+Model notes
+-----------
+* Peers have asynchronous Theta intervals (random phases).
+* A peer that acknowledges an event at time t forwards it at its next
+  interval boundary; all children of that flush share the flush instant
+  and draw independent network delays (exponential with mean delta_avg).
+* Failures (half of leaves, as in §VII-A) are detected after
+  U(Theta, 2*Theta) — one missed TTL-0 message plus the probe (Rule 5);
+  joins and voluntary leaves are announced immediately.
+* A routing-table entry is stale from the instant the event happens until
+  the observing peer acknowledges it; a random-target lookup fails with
+  probability (#stale entries)/n (paper §IV-D).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tuning import EdraParams
+from .analysis import M_BITS, V_A, V_M
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    n: int                      # ring size (held constant; leave+rejoin churn)
+    s_avg: float                # average session length, seconds
+    duration: float = 1800.0    # measurement window, seconds (paper: 30 min)
+    f: float = 0.01
+    delta_avg: float = 0.050    # mean one-way message delay, seconds
+    failure_fraction: float = 0.5   # of leaves detected via Rule 5 (§VII-A)
+    lookups: int = 4096         # lookup samples for the one-hop fraction
+    seed: int = 0
+
+
+@dataclass
+class SimResult:
+    params: EdraParams
+    num_events: int
+    one_hop_fraction: float
+    mean_ack_time: float
+    p99_ack_time: float
+    theorem1_bound: float       # rho*Theta/2 + detection & delay allowances
+    mean_out_bps: float
+    p95_out_bps: float
+    analytical_bps: float
+    per_peer_out_bps: np.ndarray
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "n": self.params.n,
+            "theta_s": self.params.theta,
+            "events": self.num_events,
+            "one_hop_fraction": self.one_hop_fraction,
+            "mean_ack_s": self.mean_ack_time,
+            "p99_ack_s": self.p99_ack_time,
+            "t_avg_bound_s": self.theorem1_bound,
+            "mean_out_bps": self.mean_out_bps,
+            "p95_out_bps": self.p95_out_bps,
+            "analytical_bps": self.analytical_bps,
+        }
+
+
+def _popcount(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.population_count(x.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def _trailing_zeros(x: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.int32)
+    lsb = jnp.bitwise_and(x, -x)
+    return _popcount((lsb - 1).astype(jnp.uint32))
+
+
+@partial(jax.jit, static_argnames=("n", "rho", "num_events", "num_lookups",
+                                   "num_intervals"))
+def _simulate_core(key, *, n: int, rho: int, num_events: int, num_lookups: int,
+                   num_intervals: int, theta: float, duration: float,
+                   delta_avg: float, failure_fraction: float):
+    k_ev, k_rep, k_fail, k_phase, k_delay, k_det, k_lt, k_lo = jax.random.split(key, 8)
+
+    # --- events ------------------------------------------------------------
+    t_event = jnp.sort(jax.random.uniform(k_ev, (num_events,), maxval=duration))
+    reporter = jax.random.randint(k_rep, (num_events,), 0, n)  # ring index of P
+    is_failure = jax.random.uniform(k_fail, (num_events,)) < failure_fraction
+    detect_extra = jnp.where(
+        is_failure,
+        theta + jax.random.uniform(k_det, (num_events,)) * theta,  # U(Θ, 2Θ)
+        0.0,
+    )
+    t_detect = t_event + detect_extra
+
+    # --- per-peer interval phases -------------------------------------------
+    phase = jax.random.uniform(k_phase, (n,)) * theta
+
+    def next_flush(t, ph):
+        """First interval boundary of a peer with phase ph strictly after t."""
+        return ph + jnp.ceil((t - ph) / theta + 1e-9) * theta
+
+    # --- exact tree propagation ---------------------------------------------
+    # offsets[e, j] = clockwise offset of peer j from event e's reporter
+    peers = jnp.arange(n, dtype=jnp.int32)
+    offsets = (peers[None, :] - reporter[:, None]) % n          # (E, n)
+    ttl = jnp.where(offsets == 0, rho, _trailing_zeros(offsets))
+    depth = _popcount(offsets)
+    parent = jnp.bitwise_and(offsets, offsets - 1)              # (E, n) offsets
+    parent_peer = (parent + reporter[:, None]) % n              # ring index
+
+    delays = jax.random.exponential(k_delay, (num_events, n)) * delta_avg
+
+    # iterate depth levels: ack[d] = flush(ack[parent]) + delay
+    ack0 = jnp.where(offsets == 0, t_detect[:, None], jnp.inf)
+
+    def level(ack, d):
+        # columns of ``ack`` are ring indices; the tree parent of the peer
+        # in column j sits at ring index parent_peer[e, j]
+        parent_ack = jnp.take_along_axis(ack, parent_peer, axis=1)
+        parent_phase = phase[parent_peer]
+        t = next_flush(parent_ack, parent_phase) + delays
+        ack = jnp.where((depth == d) & (offsets != 0), t, ack)
+        return ack, None
+
+    ack, _ = jax.lax.scan(level, ack0, jnp.arange(1, rho + 1))
+    ack_rel = ack - t_event[:, None]                            # ack latency
+
+    # --- one-hop lookup fraction --------------------------------------------
+    t_lookup = jax.random.uniform(k_lt, (num_lookups,), maxval=duration)
+    origin = jax.random.randint(k_lo, (num_lookups,), 0, n)
+    ack_at_origin = ack[:, :]  # (E, n)
+    # stale[e, l] = event e happened before lookup l but origin not yet acked
+    ev_before = t_event[:, None] <= t_lookup[None, :]
+    not_acked = jnp.take_along_axis(
+        ack_at_origin, origin[None, :].astype(jnp.int32), axis=1
+    ) > t_lookup[None, :]
+    stale_counts = jnp.sum(ev_before & not_acked, axis=0)       # per lookup
+    one_hop = 1.0 - jnp.mean(stale_counts / n)
+
+    # --- maintenance traffic --------------------------------------------------
+    # message M(l>=1) sent by peer j at interval k iff it acked an event with
+    # TTL >= l+1 during k (Rules 3-4).  TTL-0 messages are always sent.
+    k_idx = jnp.clip(
+        jnp.floor((ack - phase[None, :]) / theta).astype(jnp.int32),
+        0, num_intervals - 1,
+    )
+    in_window = ack < duration
+
+    flat_jk = (peers[None, :] * num_intervals + k_idx).astype(jnp.int32)  # (E,n)
+
+    def msgs_for_level(l):
+        mark = jnp.zeros((n * num_intervals,), dtype=jnp.bool_)
+        sel = (ttl >= l + 1) & in_window
+        mark = mark.at[jnp.where(sel, flat_jk, 0)].max(sel)
+        mark = mark.reshape(n, num_intervals)
+        return jnp.sum(mark, axis=1)                             # per-peer count
+
+    sent_per_l = jax.vmap(msgs_for_level)(jnp.arange(1, rho))    # (rho-1, n)
+    ttl0_msgs = jnp.full((n,), jnp.floor(duration / theta).astype(jnp.int32))
+    msgs_sent = ttl0_msgs + jnp.sum(sent_per_l, axis=0)
+
+    # receivers: M(l) from j arrives at j + 2^l (ring): received == sent shifted
+    def recv_for_level(l, sent):
+        return jnp.roll(sent, 1 << l)
+
+    recv_per_l = jax.vmap(recv_for_level)(jnp.arange(1, rho), sent_per_l)
+    msgs_recv = jnp.roll(ttl0_msgs, 1) + jnp.sum(recv_per_l, axis=0)
+
+    # payload: event acked with TTL=t is re-sent in messages l < t whose
+    # target offset + 2^l stays inside the ring (Rule 8).
+    l_range = jnp.arange(rho)[None, None, :]                     # (1,1,rho)
+    sends = (l_range < ttl[:, :, None]) & \
+            ((offsets[:, :, None] + (1 << l_range)) < n) & in_window[:, :, None]
+    payload_bits = M_BITS * jnp.sum(sends, axis=(0, 2))          # per peer
+
+    out_bits = msgs_sent * V_M + msgs_recv * V_A + payload_bits
+    out_bps = out_bits / duration
+
+    return one_hop, ack_rel, out_bps, jnp.sum(in_window)
+
+
+def simulate(cfg: SimConfig) -> SimResult:
+    params = EdraParams.derive(cfg.n, cfg.s_avg, cfg.f)
+    num_events = max(1, int(round(params.r * cfg.duration)))
+    if num_events * cfg.n > 6e7:
+        raise ValueError(
+            f"sim too large: events({num_events}) x n({cfg.n}) — shrink duration")
+    num_intervals = int(np.ceil(cfg.duration / params.theta)) + 2
+
+    key = jax.random.PRNGKey(cfg.seed)
+    one_hop, ack_rel, out_bps, _ = _simulate_core(
+        key, n=cfg.n, rho=params.rho, num_events=num_events,
+        num_lookups=cfg.lookups, num_intervals=num_intervals,
+        theta=params.theta, duration=cfg.duration,
+        delta_avg=cfg.delta_avg, failure_fraction=cfg.failure_fraction)
+
+    ack_np = np.asarray(ack_rel)
+    finite = ack_np[np.isfinite(ack_np)]
+    out_np = np.asarray(out_bps)
+    from .analysis import d1ht_bandwidth
+    return SimResult(
+        params=params,
+        num_events=num_events,
+        one_hop_fraction=float(one_hop),
+        mean_ack_time=float(finite.mean()),
+        p99_ack_time=float(np.percentile(finite, 99)),
+        theorem1_bound=params.t_avg,
+        mean_out_bps=float(out_np.mean()),
+        p95_out_bps=float(np.percentile(out_np, 95)),
+        analytical_bps=d1ht_bandwidth(cfg.n, cfg.s_avg, cfg.f),
+        per_peer_out_bps=out_np,
+    )

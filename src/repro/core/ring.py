@@ -1,0 +1,138 @@
+"""Consistent-hashing identifier ring (paper §III).
+
+Peers and keys live on the same identifier ring [0 : N], N >> n.  Key IDs
+are hashes of key values; peer IDs are hashes of peer IP addresses
+(paper uses SHA-1; we expose the hash as a pluggable function and default
+to SHA-1 truncated to ``ID_BITS`` bits).
+
+This module is deliberately framework-free (pure Python + numpy) so it can
+back both the protocol simulators and the JAX serving/runtime layers.
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+from dataclasses import dataclass, field
+from typing import Iterable, Iterator, List, Optional, Sequence
+
+ID_BITS = 64  # 2**64 ring; plenty for 10^7 peers and keeps IDs in uint64.
+RING_SIZE = 1 << ID_BITS
+
+
+def hash_id(value: bytes | str) -> int:
+    """SHA-1 of ``value`` truncated to ID_BITS bits (paper §III, [37])."""
+    if isinstance(value, str):
+        value = value.encode("utf-8")
+    digest = hashlib.sha1(value).digest()
+    return int.from_bytes(digest[: ID_BITS // 8], "big")
+
+
+def peer_id(ip: str, port: int = 0) -> int:
+    """Peer ID = hash of its address (paper hashes the IP address)."""
+    return hash_id(f"{ip}:{port}" if port else ip)
+
+
+def key_id(key: bytes | str) -> int:
+    return hash_id(key)
+
+
+def ring_distance(a: int, b: int) -> int:
+    """Clockwise distance from a to b on the ring."""
+    return (b - a) % RING_SIZE
+
+
+def in_interval(x: int, lo: int, hi: int, *, inclusive_hi: bool = True) -> bool:
+    """True iff x ∈ (lo, hi] (or (lo, hi)) walking clockwise on the ring."""
+    d_x = ring_distance(lo, x)
+    d_hi = ring_distance(lo, hi)
+    if d_x == 0:
+        return False
+    return d_x <= d_hi if inclusive_hi else d_x < d_hi
+
+
+@dataclass
+class RoutingTable:
+    """A full routing table: the sorted set of all known peer IDs.
+
+    Single-hop lookup = find the *successor* of the key ID (the first peer
+    clockwise from the key), exactly as in Chord/D1HT.  Stored as a sorted
+    list for O(log n) bisect lookups; the Pallas ``ring_lookup`` kernel
+    implements the same search vectorized for request batches.
+    """
+
+    ids: List[int] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.ids = sorted(set(self.ids))
+
+    # -- membership -------------------------------------------------------
+    def add(self, pid: int) -> bool:
+        i = bisect.bisect_left(self.ids, pid)
+        if i < len(self.ids) and self.ids[i] == pid:
+            return False
+        self.ids.insert(i, pid)
+        return True
+
+    def remove(self, pid: int) -> bool:
+        i = bisect.bisect_left(self.ids, pid)
+        if i < len(self.ids) and self.ids[i] == pid:
+            del self.ids[i]
+            return True
+        return False
+
+    def __contains__(self, pid: int) -> bool:
+        i = bisect.bisect_left(self.ids, pid)
+        return i < len(self.ids) and self.ids[i] == pid
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(self.ids)
+
+    # -- ring navigation ---------------------------------------------------
+    def successor_of(self, x: int) -> int:
+        """First peer clockwise from x (the owner of key x)."""
+        if not self.ids:
+            raise LookupError("empty routing table")
+        i = bisect.bisect_left(self.ids, x)
+        return self.ids[i % len(self.ids)]
+
+    def predecessor_of(self, x: int) -> int:
+        if not self.ids:
+            raise LookupError("empty routing table")
+        i = bisect.bisect_left(self.ids, x)
+        return self.ids[(i - 1) % len(self.ids)]
+
+    def succ(self, p: int, i: int = 1) -> int:
+        """succ(p, i): the i-th successor of peer p (paper §IV). succ(p,0)=p."""
+        j = bisect.bisect_left(self.ids, p)
+        if j >= len(self.ids) or self.ids[j] != p:
+            raise LookupError(f"peer {p} not in table")
+        return self.ids[(j + i) % len(self.ids)]
+
+    def pred(self, p: int, i: int = 1) -> int:
+        return self.succ(p, -i)
+
+    def stretch(self, p: int, k: int) -> List[int]:
+        """stretch(p,k) = {succ(p,i) | 0 <= i <= k} (paper §IV)."""
+        n = len(self.ids)
+        return [self.succ(p, i) for i in range(min(k, n - 1) + 1)]
+
+    def owner(self, key: bytes | str) -> int:
+        return self.successor_of(key_id(key))
+
+
+def build_ring(num_peers: int, *, seed: int = 0) -> RoutingTable:
+    """Deterministic ring of ``num_peers`` synthetic peers (10.x.x.x IPs)."""
+    ids = []
+    i = 0
+    seen = set()
+    while len(ids) < num_peers:
+        ip = f"10.{(seed + i) >> 16 & 255}.{(seed + i) >> 8 & 255}.{(seed + i) & 255}"
+        pid = peer_id(ip, port=1000 + ((seed + i) >> 24))
+        if pid not in seen:
+            seen.add(pid)
+            ids.append(pid)
+        i += 1
+    return RoutingTable(ids)

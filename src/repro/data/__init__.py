@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, Prefetcher, SyntheticLM, make_pipeline
+__all__ = ["DataConfig", "Prefetcher", "SyntheticLM", "make_pipeline"]

@@ -1,0 +1,14 @@
+"""Protocol-level DHT implementations: D1HT, 1h-Calot, latency models.
+
+``des`` is a deterministic discrete-event network; ``experiment`` drives
+the paper's §VII churn methodology over it.
+"""
+from .calot_node import CalotPeer
+from .d1ht_node import D1HTPeer
+from .des import LanDelay, SimNet, WanDelay
+from .experiment import ChurnConfig, ChurnResult, run_churn
+
+__all__ = [
+    "CalotPeer", "D1HTPeer", "LanDelay", "SimNet", "WanDelay",
+    "ChurnConfig", "ChurnResult", "run_churn",
+]

@@ -1,0 +1,156 @@
+"""Deterministic discrete-event network simulator for the DHT protocols.
+
+Message-level fidelity: every maintenance datagram (with its Fig.-2 byte
+size), ack, probe and heartbeat is individually delivered with a sampled
+network delay; per-peer traffic is metered exactly as §VII-A counts it
+(routing-table maintenance + failure detection only; lookups and
+routing-table transfers excluded).
+
+The two experimental environments of the paper map to delay models:
+  * ``LanDelay``  — HPC datacenter (§VII-C/D): ~70 us one-way.
+  * ``WanDelay``  — PlanetLab (§VII-B): lognormal, ~60 ms median one-way.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+import random
+from abc import ABC, abstractmethod
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.ring import RoutingTable, ring_distance
+from .messages import V_A_BITS, TrafficMeter
+
+
+# ---------------------------------------------------------------------------
+# Delay models
+# ---------------------------------------------------------------------------
+
+class DelayModel(ABC):
+    @abstractmethod
+    def sample(self, rng: random.Random) -> float: ...
+
+
+class LanDelay(DelayModel):
+    """HPC datacenter: measured one-hop lookup ~0.14 ms RTT => ~70 us one-way."""
+
+    def __init__(self, mean: float = 70e-6):
+        self.mean = mean
+
+    def sample(self, rng: random.Random) -> float:
+        return rng.expovariate(1.0 / self.mean) + 10e-6
+
+
+class WanDelay(DelayModel):
+    """PlanetLab-like WAN: lognormal one-way delay, median ~60 ms."""
+
+    def __init__(self, median: float = 0.060, sigma: float = 0.6):
+        self.mu = math.log(median)
+        self.sigma = sigma
+
+    def sample(self, rng: random.Random) -> float:
+        return rng.lognormvariate(self.mu, self.sigma)
+
+
+# ---------------------------------------------------------------------------
+# Network
+# ---------------------------------------------------------------------------
+
+@dataclass(order=True)
+class _Scheduled:
+    t: float
+    seq: int
+    fn: Callable[[], None] = field(compare=False)
+
+
+class SimPeer(ABC):
+    """Base class: a peer with an ID living in a SimNet."""
+
+    def __init__(self, pid: int, net: "SimNet"):
+        self.id = pid
+        self.net = net
+        self.alive = False
+
+    @abstractmethod
+    def start(self) -> None: ...
+
+    @abstractmethod
+    def stop(self, *, crash: bool) -> None: ...
+
+    def on_datagram(self, src: int, kind: str, payload) -> None:  # pragma: no cover
+        pass
+
+
+class SimNet:
+    def __init__(self, delay: DelayModel, seed: int = 0):
+        self.delay = delay
+        self.rng = random.Random(seed)
+        self.now = 0.0
+        self._heap: List[_Scheduled] = []
+        self._seq = 0
+        self.peers: Dict[int, SimPeer] = {}
+        self.ring = RoutingTable([])          # ground truth: in-ring peers
+        self.meters: Dict[int, TrafficMeter] = {}
+        self.metering = False                 # warmup excluded (§VII-A phase 2)
+        self.event_seq = 0                    # global event seq for dedup keys
+
+    # -- scheduling ---------------------------------------------------------
+    def schedule(self, dt: float, fn: Callable[[], None]) -> None:
+        self.schedule_at(self.now + dt, fn)
+
+    def schedule_at(self, t: float, fn: Callable[[], None]) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, _Scheduled(t, self._seq, fn))
+
+    def run_until(self, t_end: float) -> None:
+        while self._heap and self._heap[0].t <= t_end:
+            item = heapq.heappop(self._heap)
+            self.now = item.t
+            item.fn()
+        self.now = t_end
+
+    # -- peers ---------------------------------------------------------------
+    def add_peer(self, peer: SimPeer) -> None:
+        self.peers[peer.id] = peer
+        self.meters.setdefault(peer.id, TrafficMeter())
+
+    def is_alive(self, pid: int) -> bool:
+        p = self.peers.get(pid)
+        return p is not None and p.alive
+
+    # -- transport ------------------------------------------------------------
+    def send(self, src: int, dst: int, bits: int, kind: str, payload=None,
+             *, acked: bool = True, maintenance: bool = True) -> None:
+        """UDP datagram with Fig-2 accounting.
+
+        ``acked=True`` models the per-message acknowledgment (v_a bits from
+        dst back to src) without a separate queue event.
+        """
+        if self.metering:
+            m = self.meters[src]
+            m.send(bits, maintenance)
+        if not self.is_alive(dst):
+            return  # datagram lost; retransmission is the sender's problem
+        d = self.delay.sample(self.rng)
+
+        def deliver() -> None:
+            peer = self.peers.get(dst)
+            if peer is None or not peer.alive:
+                return
+            if self.metering:
+                self.meters[dst].recv(bits)
+                if acked:
+                    self.meters[dst].send(V_A_BITS, maintenance)
+                    self.meters[src].recv(V_A_BITS)
+            peer.on_datagram(src, kind, payload)
+
+        self.schedule(d, deliver)
+
+    # -- measurement -----------------------------------------------------------
+    def reset_meters(self) -> None:
+        for pid in self.meters:
+            self.meters[pid] = TrafficMeter()
+
+    def total_maint_out_bits(self) -> float:
+        return sum(m.maint_out_bits for m in self.meters.values())

@@ -1,0 +1,215 @@
+"""Churn experiment harness reproducing the paper's §VII methodology.
+
+Two-phase runs: a growth/warmup phase (unmetered) followed by a metered
+measurement window (the paper uses 30 min).  Churn is driven by per-peer
+session lengths (Eq III.1 emerges from S_avg); half of the leaves are
+crashes (SIGKILL — no warning, buffered events lost) and leaving peers
+rejoin after 3 minutes with the same ID, exactly as in §VII-A.
+
+Lookup correctness is sampled against the ground-truth ring: a lookup is
+solved with one hop iff the origin's routing table maps the key to the
+true current owner (stale entries => routing failure => extra hops).
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.analysis import calot_bandwidth, d1ht_bandwidth
+from repro.core.ring import RoutingTable, build_ring
+from repro.core.tuning import EdraParams
+from .calot_node import CalotPeer
+from .d1ht_node import D1HTPeer
+from .des import DelayModel, LanDelay, SimNet
+from .messages import V_A_BITS
+
+
+# ---------------------------------------------------------------------------
+# Session-length distributions (§V: P2P sessions are heavy-tailed)
+# ---------------------------------------------------------------------------
+
+class SessionDist:
+    """Exponential by default; ``volatile_fraction`` mixes in short
+    (< t_q) sessions to model the heavy tail head (24% KAD / 31% Gnutella
+    sessions under 10 min)."""
+
+    def __init__(self, s_avg: float, volatile_fraction: float = 0.0,
+                 t_q: float = 600.0):
+        self.s_avg = s_avg
+        self.vol = volatile_fraction
+        self.t_q = t_q
+        if volatile_fraction > 0.0:
+            short_mean = t_q / 2.0
+            self.long_mean = (s_avg - volatile_fraction * short_mean) / (
+                1.0 - volatile_fraction)
+        else:
+            self.long_mean = s_avg
+
+    def sample(self, rng: random.Random) -> float:
+        if self.vol > 0.0 and rng.random() < self.vol:
+            return rng.uniform(0.0, self.t_q)
+        return rng.expovariate(1.0 / self.long_mean)
+
+
+# ---------------------------------------------------------------------------
+# Experiment config / result
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ChurnConfig:
+    n: int
+    s_avg: float                  # seconds
+    protocol: str = "d1ht"        # "d1ht" | "calot"
+    duration: float = 1800.0      # metered window (paper: 30 min)
+    warmup: float = 300.0
+    delay: Optional[DelayModel] = None
+    seed: int = 0
+    rejoin_delay: float = 180.0   # paper: rejoin in 3 minutes, same ID
+    crash_fraction: float = 0.5   # paper: half the leaves are SIGKILL
+    lookup_samples: int = 4000
+    quarantine_tq: Optional[float] = None
+    volatile_fraction: float = 0.0
+    f: float = 0.01
+
+
+@dataclass
+class ChurnResult:
+    cfg: ChurnConfig
+    params: EdraParams
+    events: int
+    one_hop_fraction: float
+    sum_out_bps: float            # Σ over peers (Figs 3-4 plot the sum)
+    mean_out_bps: float
+    analytical_bps: float         # per-peer model prediction
+    quarantine_admitted: int = 0
+    quarantine_skipped: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "n": self.cfg.n,
+            "protocol": self.cfg.protocol,
+            "events": self.events,
+            "one_hop_fraction": round(self.one_hop_fraction, 5),
+            "mean_out_bps": round(self.mean_out_bps, 1),
+            "sum_out_kbps": round(self.sum_out_bps / 1000.0, 1),
+            "analytical_bps": round(self.analytical_bps, 1),
+            "ratio_sim_over_model": round(
+                self.mean_out_bps / max(self.analytical_bps, 1e-9), 3),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+
+def run_churn(cfg: ChurnConfig) -> ChurnResult:
+    rng = random.Random(cfg.seed + 7)
+    net = SimNet(cfg.delay or LanDelay(), seed=cfg.seed)
+    params = EdraParams.derive(cfg.n, cfg.s_avg, cfg.f)
+    sessions = SessionDist(cfg.s_avg, cfg.volatile_fraction,
+                           cfg.quarantine_tq or 600.0)
+
+    ring = build_ring(cfg.n, seed=cfg.seed)
+    ids = list(ring.ids)
+    make = (lambda pid: D1HTPeer(pid, net, params)) if cfg.protocol == "d1ht" \
+        else (lambda pid: CalotPeer(pid, net, params))
+    for pid in ids:
+        net.add_peer(make(pid))
+    net.ring = RoutingTable(ids)
+
+    # start everyone with the full table and randomized interval phases
+    for pid in ids:
+        peer = net.peers[pid]
+        peer.table = RoutingTable(ids)
+        phase = rng.random() * max(params.theta, 1.0)
+        net.schedule(phase, lambda p=peer: p.start())
+
+    stats = {"events": 0, "lookups": 0, "one_hop": 0,
+             "q_admit": 0, "q_skip": 0}
+
+    # -- churn driver ---------------------------------------------------------
+    def schedule_leave(pid: int, session: float) -> None:
+        net.schedule(session, lambda: do_leave(pid))
+
+    def do_leave(pid: int) -> None:
+        peer = net.peers[pid]
+        if not peer.alive:
+            return
+        crash = rng.random() < cfg.crash_fraction
+        peer.stop(crash=crash)
+        if pid in net.ring:
+            net.ring.remove(pid)
+            if net.metering:
+                stats["events"] += 1
+        net.schedule(cfg.rejoin_delay, lambda: do_join(pid))
+
+    def do_join(pid: int) -> None:
+        session = sessions.sample(rng)
+        if cfg.quarantine_tq is not None:
+            if session <= cfg.quarantine_tq:
+                # volatile peer: never admitted, no events, rejoin later (§V)
+                stats["q_skip"] += 1
+                net.schedule(session + cfg.rejoin_delay, lambda: do_join(pid))
+                return
+            stats["q_admit"] += 1
+            net.schedule(cfg.quarantine_tq, lambda: admit(pid, session))
+            return
+        admit(pid, session)
+
+    def admit(pid: int, session: float) -> None:
+        try:
+            succ_id = net.ring.successor_of(pid)
+        except LookupError:
+            return
+        net.send(pid, succ_id, V_A_BITS, "join-request", None)
+        net.ring.add(pid)
+        if net.metering:
+            stats["events"] += 1
+        remaining = session - (cfg.quarantine_tq or 0.0)
+        schedule_leave(pid, max(remaining, 1.0))
+
+    for pid in ids:
+        schedule_leave(pid, max(1.0, sessions.sample(rng)))
+
+    # -- lookup sampling ---------------------------------------------------------
+    lookup_dt = cfg.duration / cfg.lookup_samples
+
+    def do_lookup() -> None:
+        alive = [p for p in net.ring if net.is_alive(p)]
+        if len(alive) >= 2:
+            origin = net.peers[rng.choice(alive)]
+            kid = rng.getrandbits(60)
+            try:
+                local = origin.table.successor_of(kid)
+                true = net.ring.successor_of(kid)
+                stats["lookups"] += 1
+                if local == true and net.is_alive(true):
+                    stats["one_hop"] += 1
+            except LookupError:
+                pass
+        net.schedule(lookup_dt, do_lookup)
+
+    # -- run -----------------------------------------------------------------------
+    net.run_until(cfg.warmup)
+    net.reset_meters()
+    net.metering = True
+    net.schedule(lookup_dt, do_lookup)
+    net.run_until(cfg.warmup + cfg.duration)
+    net.metering = False
+
+    total_bits = net.total_maint_out_bits()
+    sum_bps = total_bits / cfg.duration
+    mean_bps = sum_bps / cfg.n
+    analytical = (d1ht_bandwidth(cfg.n, cfg.s_avg, cfg.f)
+                  if cfg.protocol == "d1ht"
+                  else calot_bandwidth(cfg.n, cfg.s_avg))
+    return ChurnResult(
+        cfg=cfg, params=params, events=stats["events"],
+        one_hop_fraction=stats["one_hop"] / max(stats["lookups"], 1),
+        sum_out_bps=sum_bps, mean_out_bps=mean_bps,
+        analytical_bps=analytical,
+        quarantine_admitted=stats["q_admit"],
+        quarantine_skipped=stats["q_skip"],
+    )

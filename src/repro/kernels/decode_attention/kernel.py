@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: batched single-token decode attention.
+
+Decode is HBM-bandwidth-bound: each new token must stream the whole KV
+cache once.  The kernel tiles the cache along the sequence axis (grid
+axis 2, sequential) and keeps the per-(batch, kv-head) query group —
+(g, hd), g = H/Hkv query heads — plus the online-softmax state in VMEM,
+so the cache is read EXACTLY once per step at full burst width and no
+(B,H,S) score tensor ever reaches HBM.
+
+Grid: (B, Hkv, S/BS).  Block shapes: q (1,1,g,hd), kv (1,BS,1,hd) —
+the g x BS score tile is MXU-shaped when g is a multiple of 8 and
+BS = 128/256.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BS = 256
+NEG = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, s_blocks: int, scale: float):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)          # (BS, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = si * BS + jax.lax.iota(jnp.int32, BS)
+    valid = pos < len_ref[0]
+    s = jnp.where(valid[None, :], s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(si == s_blocks - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, length: jax.Array, *,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B,H,hd); caches: (B,S,Hkv,hd); length: (B,) -> (B,H,hd)."""
+    b, h, hd = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    assert s % BS == 0, "pad cache length to a BS multiple"
+    qg = q.reshape(b, hkv, g, hd)
+    grid = (b, hkv, s // BS)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, s_blocks=s // BS,
+                          scale=1.0 / math.sqrt(hd)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, ki, si: (bi,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, hd), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, BS, 1, hd), lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, BS, 1, hd), lambda bi, ki, si: (bi, si, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(b, h, hd)

@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array, *, use_pallas: bool = True,
+                     interpret: bool = True) -> jax.Array:
+    if use_pallas:
+        return decode_attention_pallas(q, k_cache, v_cache, length,
+                                       interpret=interpret)
+    return decode_attention_ref(q, k_cache, v_cache, length)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, length: jax.Array) -> jax.Array:
+    """q: (B,H,hd); caches: (B,S,Hkv,hd); length: (B,) -> (B,H,hd)."""
+    b, h, hd = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache.astype(jnp.float32))
+    sc = sc / math.sqrt(hd)
+    pos = jnp.arange(s)
+    sc = jnp.where(pos[None, None, None, :] < length[:, None, None, None],
+                   sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)

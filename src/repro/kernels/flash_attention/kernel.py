@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: causal flash attention (GQA-aware index maps).
+
+Classic TPU flash schedule: grid (B*H, Sq/BQ, Sk/BK) with the KV axis
+innermost ("arbitrary": sequential revisits of the same output block).
+Online-softmax running max/denominator live in VMEM scratch; the (BQ,BK)
+score tile never leaves VMEM — this is precisely the HBM traffic the jnp
+lowering pays (§Roofline memory term) and the kernel removes.
+
+Block shapes are MXU-aligned (BQ=BK=128 >= 8x128 tiles; hd is typically
+128).  GQA is handled in the k/v index_map: q head -> kv head = h // g,
+so kv tiles are fetched once per q-head group without materializing the
+repeated heads.  Causal masking skips fully-masked KV tiles via pl.when.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, sk_blocks: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (not causal) or (ki <= qi)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)            # (BQ, hd)
+        k = k_ref[0].astype(jnp.float32)            # (BK, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (BQ, BK)
+        if causal:
+            qpos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+            kpos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+            s = jnp.where(qpos >= kpos, s, NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == sk_blocks - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool, interpret: bool = True) -> jax.Array:
+    """q: (B,Sq,H,hd); k/v: (B,Sk,Hkv,hd) -> (B,Sq,H,hd)."""
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    assert sq % BQ == 0 and sk % BK == 0, "pad sequences to 128"
+    # flatten (B, H) into the leading grid dim; kv head = head // g
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, hd)
+    grid = (b * h, sq // BQ, sk // BK)
+
+    def kv_map(bh, qi, ki):
+        return (bh // g, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal,
+                          sk_blocks=sk // BK, scale=1.0 / math.sqrt(hd)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BQ, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, BK, hd), kv_map),
+            pl.BlockSpec((1, BK, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            # (BQ,) running max, (BQ,) denominator, (BQ,hd) accumulator —
+            # resident in VMEM across the sequential KV grid axis
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

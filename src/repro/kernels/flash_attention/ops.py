@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for flash attention (Pallas on TPU, jnp oracle)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "use_pallas", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, use_pallas: bool = True,
+                    interpret: bool = True) -> jax.Array:
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      interpret=interpret)
+    return attention_ref(q, k, v, causal=causal)

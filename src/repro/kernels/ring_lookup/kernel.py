@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: batched consistent-hash ring lookup.
+
+TPU adaptation of the DHT hot path (DESIGN.md §2): a binary search is
+gather-heavy and serial — poison for the VPU.  Instead each program
+block computes bisect_left as a *compare-and-count* reduction:
+
+    idx(q) = sum_j [table[j] < q]
+
+which is one broadcasted (BQ x BT) uint compare + row-sum per table tile
+— pure vector lanes, no gathers, and the table tiles stream through VMEM.
+For routing tables up to ~10^6 peers (the paper's largest system) the
+O(N) count costs less than the lane-divergent O(log N) search on TPU.
+
+Grid: (Q/BQ, N/BT); the table axis is the innermost (arbitrary) dim and
+accumulates into the output block, which stays resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 1024          # queries per program (8 sublanes x 128 lanes)
+BT = 2048          # table entries per tile (8 KiB of uint32 in VMEM)
+
+
+def _ring_lookup_kernel(q_ref, t_ref, o_ref, *, n_total: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    q = q_ref[...]                                  # (BQ,)
+    t = t_ref[...]                                  # (BT,)
+    # mask table padding (last tile may exceed n_total)
+    base = ti * BT
+    valid = (base + jax.lax.iota(jnp.int32, BT)) < n_total
+    lt = (t[None, :] < q[:, None]) & valid[None, :]
+    o_ref[...] += jnp.sum(lt.astype(jnp.int32), axis=1)
+
+
+def ring_lookup_pallas(keys: jax.Array, table: jax.Array, *,
+                       interpret: bool = True) -> jax.Array:
+    """keys: (Q,) uint32; table: (N,) sorted uint32 -> (Q,) int32."""
+    q, n = keys.shape[0], table.shape[0]
+    qp = (q + BQ - 1) // BQ * BQ
+    np_ = (n + BT - 1) // BT * BT
+    keys_p = jnp.pad(keys, (0, qp - q))
+    table_p = jnp.pad(table, (0, np_ - n),
+                      constant_values=jnp.array(0, table.dtype))
+    grid = (qp // BQ, np_ // BT)
+    counts = pl.pallas_call(
+        functools.partial(_ring_lookup_kernel, n_total=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BQ,), lambda qi, ti: (qi,)),
+            pl.BlockSpec((BT,), lambda qi, ti: (ti,)),
+        ],
+        out_specs=pl.BlockSpec((BQ,), lambda qi, ti: (qi,)),
+        out_shape=jax.ShapeDtypeStruct((qp,), jnp.int32),
+        interpret=interpret,
+    )(keys_p, table_p)
+    return (counts[:q] % n).astype(jnp.int32)

@@ -1,0 +1,23 @@
+"""Jit'd public wrapper: route key IDs to ring successor indices."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ring_lookup_pallas
+from .ref import ring_lookup_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ring_lookup(keys: jax.Array, table: jax.Array, *,
+                use_pallas: bool = True, interpret: bool = True) -> jax.Array:
+    """keys (Q,), sorted table (N,) -> successor indices (Q,) int32.
+
+    ``interpret=True`` (default) runs the Pallas kernel body in the
+    interpreter — required on CPU; set False on real TPUs.
+    """
+    if use_pallas:
+        return ring_lookup_pallas(keys, table, interpret=interpret)
+    return ring_lookup_ref(keys, table)

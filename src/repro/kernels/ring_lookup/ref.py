@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the consistent-hash ring lookup.
+
+successor index of key k in a sorted ring table = bisect_left(table, k)
+mod N (the first peer clockwise from the key; wraps to index 0 past the
+last peer) — identical semantics to repro.core.ring.RoutingTable.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ring_lookup_ref(keys: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """keys: (Q,) uint32/int32; table: (N,) sorted same dtype -> (Q,) int32."""
+    idx = jnp.searchsorted(table, keys, side="left")
+    return (idx % table.shape[0]).astype(jnp.int32)

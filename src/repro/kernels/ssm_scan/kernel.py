@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: S6 selective scan (Mamba-1 hot loop).
+
+TPU adaptation (DESIGN.md §2): the CUDA kernel's warp-level recurrence
+becomes a VMEM-resident channel-block recurrence.  Grid (Bb, Din/BD):
+each program owns a (BD, N) state slab in VMEM and walks the sequence
+with a fori_loop — the state NEVER round-trips to HBM (the jnp lowering
+writes (B,L,D,N) decay products; the kernel keeps them in registers).
+Channels are embarrassingly parallel; the sequential axis is only L.
+
+All sequence inputs for the block are staged in VMEM ((L,BD)+(L,N) —
+for L=4096, BD=256, N=16 that's ~4.5 MB), so dt/B/C/x stream in once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BD = 256     # channels per program
+
+
+def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
+                y_ref, hout_ref, *, seq_len: int):
+    a = a_ref[...].astype(jnp.float32)              # (BD, N)
+    d = d_ref[...].astype(jnp.float32)              # (BD,)
+
+    def step(t, h):
+        xt = x_ref[0, t].astype(jnp.float32)        # (BD,)
+        dtt = dt_ref[0, t].astype(jnp.float32)      # (BD,)
+        bt = b_ref[0, t].astype(jnp.float32)        # (N,)
+        ct = c_ref[0, t].astype(jnp.float32)        # (N,)
+        da = jnp.exp(dtt[:, None] * a)              # (BD, N)
+        h = da * h + (dtt * xt)[:, None] * bt[None, :]
+        y_ref[0, t] = (jnp.sum(h * ct[None, :], axis=1)
+                       + d * xt).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, seq_len, step,
+                          h0_ref[0].astype(jnp.float32))
+    hout_ref[0] = h
+
+
+def ssm_scan_pallas(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+                    A: jax.Array, D: jax.Array, h0: jax.Array, *,
+                    interpret: bool = True):
+    """x,dt: (Bb,L,Din); B,C: (Bb,L,N); A: (Din,N); D: (Din,);
+    h0: (Bb,Din,N) -> (y (Bb,L,Din), h_last (Bb,Din,N) f32)."""
+    bb, l, din = x.shape
+    n = A.shape[1]
+    assert din % BD == 0, "pad d_inner to a BD multiple"
+    grid = (bb, din // BD)
+    y, h_last = pl.pallas_call(
+        functools.partial(_ssm_kernel, seq_len=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, l, BD), lambda bi, di: (bi, 0, di)),
+            pl.BlockSpec((1, l, BD), lambda bi, di: (bi, 0, di)),
+            pl.BlockSpec((1, l, n), lambda bi, di: (bi, 0, 0)),
+            pl.BlockSpec((1, l, n), lambda bi, di: (bi, 0, 0)),
+            pl.BlockSpec((BD, n), lambda bi, di: (di, 0)),
+            pl.BlockSpec((BD,), lambda bi, di: (di,)),
+            pl.BlockSpec((1, BD, n), lambda bi, di: (bi, di, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l, BD), lambda bi, di: (bi, 0, di)),
+            pl.BlockSpec((1, BD, n), lambda bi, di: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bb, l, din), x.dtype),
+            jax.ShapeDtypeStruct((bb, din, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, B, C, A, D, h0)
+    return y, h_last

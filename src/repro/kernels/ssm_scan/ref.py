@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the S6 selective-scan recurrence (Mamba-1 core).
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t * B_t
+    y_t = h_t . C_t + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
+                 A: jax.Array, D: jax.Array,
+                 h0: jax.Array | None = None):
+    """x,dt: (Bb,L,Din); B,C: (Bb,L,N); A: (Din,N); D: (Din,).
+
+    -> y (Bb,L,Din), h_last (Bb,Din,N). All math in f32.
+    """
+    bb, l, din = x.shape
+    n = A.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        da = jnp.exp(dtt[..., None] * Af[None])          # (Bb,Din,N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((bb, din, n), jnp.float32)
+    h_last, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+         Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + D.astype(jnp.float32)[None, None] * xf
+    return y.astype(x.dtype), h_last

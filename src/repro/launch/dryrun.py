@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the
+# device count on first backend init). Everything below is ordinary code.
+# (No `from __future__ import annotations` here for the same reason: the
+# os.environ lines must be the first statements in the file.)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, with NO device allocation (ShapeDtypeStruct
+stand-ins only):
+    * compiled.memory_analysis()  -> bytes per device (proves it fits)
+    * compiled.cost_analysis()    -> HLO FLOPs / bytes for §Roofline
+    * collective bytes parsed from the compiled HLO text
+and appends a JSON record to ``results/dryrun.json``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape train_4k --mesh single          # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.registry import ARCH_IDS, shape_cells, skipped_cells
+from repro.launch import hlo_cost, presets
+from repro.launch.inputs import batch_pspecs, input_specs
+from repro.launch.mesh import HARDWARE, make_production_mesh
+from repro.models import Model
+from repro.optim import adamw
+from repro.sharding import specs as sh
+from repro.train.step import TrainConfig, make_train_step
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results")
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    totals: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        if dtype == "token" or dtype not in DTYPE_BYTES:
+            continue
+        size = DTYPE_BYTES[dtype]
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        totals[op] = totals.get(op, 0.0) + size
+        counts[op] = counts.get(op, 0) + 1
+    return {"bytes_by_op": totals, "counts_by_op": counts,
+            "total_bytes": sum(totals.values())}
+
+
+def f32_twin_bytes(hlo_text: str, floor: int = 64 * 2**20) -> int:
+    """CPU-XLA artifact estimator: the CPU backend upcasts bf16 weights to
+    f32 (no native bf16 ALU) and hoists the converted copies out of loops.
+    A real TPU (native bf16 MXU) never materializes them.  We flag every
+    f32 tensor that is a dim-exact twin of a bf16 tensor in the module and
+    exceeds ``floor`` bytes — the sum bounds the artifact inflation of
+    memory_analysis() (one live copy each)."""
+    bf16_dims = set()
+    f32_sizes = {}
+    for m in re.finditer(r"(bf16|f32)\[([0-9,]+)\]", hlo_text):
+        dims = m.group(2)
+        if m.group(1) == "bf16":
+            bf16_dims.add(dims)
+        else:
+            n = 4
+            for d in dims.split(","):
+                n *= int(d)
+            f32_sizes[dims] = n
+    return sum(n for dims, n in f32_sizes.items()
+               if dims in bf16_dims and n >= floor)
+
+
+def _resolve_pspecs(tree):
+    """Logical-axis tuples -> PartitionSpec, rule-resolved for the mesh."""
+    return jax.tree.map(lambda axes: sh.logical_spec(*axes), tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _shardings(mesh, pspec_tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _fit_spec(mesh, spec: P, shape) -> P:
+    """Drop mesh axes that do not divide the tensor dim (whisper's 12
+    heads or odd vocab on a 16-way axis would otherwise fail to shard)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if (size and shape[i] % size == 0) else None)
+    return P(*out)
+
+
+def _fitted_shardings(mesh, pspec_tree, abstract_tree):
+    specs = jax.tree.map(lambda p: p, pspec_tree,
+                         is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(
+        lambda p, a: NamedSharding(mesh, _fit_spec(mesh, p, a.shape)),
+        specs, abstract_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               attn_impl: str = "full", microbatches: Optional[int] = None,
+               extra_rules: Optional[Dict[str, Any]] = None,
+               config_overrides: Optional[Dict[str, Any]] = None):
+    cfg = get_config(arch)
+    if config_overrides:
+        cfg = cfg.with_overrides(**config_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules, preset_mb = presets.preset(cfg, shape)
+    if extra_rules:
+        rules.update(extra_rules)
+    if microbatches is None:
+        microbatches = preset_mb
+    sh.set_mesh(mesh, rules)
+    model = Model(cfg, attn_impl=attn_impl)
+
+    aparams = model.abstract_params()
+    param_sh = _fitted_shardings(mesh, _resolve_pspecs(model.param_pspecs()),
+                                 aparams)
+    ispecs = input_specs(cfg, shape)
+    batch_sh = _fitted_shardings(mesh, _resolve_pspecs(batch_pspecs(cfg, shape)),
+                                 ispecs)
+
+    if shape.mode == "train":
+        tcfg = TrainConfig(opt=adamw.OptConfig(moment_dtype=cfg.opt_dtype),
+                           microbatches=microbatches)
+        step = make_train_step(model, tcfg)
+        astate = adamw.init_state(aparams, tcfg.opt)
+        opt_sh = {"m": param_sh, "v": param_sh,
+                  "step": NamedSharding(mesh, P())}
+        fn = jax.jit(step,
+                     in_shardings=(param_sh, opt_sh, batch_sh),
+                     out_shardings=(param_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(aparams, astate, ispecs)
+    elif shape.mode == "prefill":
+        acache = model.cache_shapes(shape.global_batch, shape.seq_len)
+        cache_sh = _fitted_shardings(mesh, _resolve_pspecs(model.cache_pspecs()),
+                                     acache)
+
+        def prefill(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        fn = jax.jit(prefill,
+                     in_shardings=(param_sh, batch_sh, cache_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(2,))
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(aparams, ispecs, acache)
+    else:  # decode
+        acache = model.cache_shapes(shape.global_batch, shape.seq_len)
+        cache_sh = _fitted_shardings(mesh, _resolve_pspecs(model.cache_pspecs()),
+                                     acache)
+
+        def serve_step(params, cache, tokens, index):
+            return model.decode_step(params, cache, tokens, index)
+
+        idx = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(serve_step,
+                     in_shardings=(param_sh, cache_sh, batch_sh["tokens"],
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(1,))
+        with jax.set_mesh(mesh):
+            lowered = fn.lower(aparams, acache, ispecs["tokens"], idx)
+    return lowered, mesh, cfg, shape
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             attn_impl: str = "full", microbatches: Optional[int] = None,
+             extra_rules: Optional[Dict[str, Any]] = None,
+             config_overrides: Optional[Dict[str, Any]] = None,
+             tag: str = "baseline") -> Dict[str, Any]:
+    t0 = time.time()
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "attn_impl": attn_impl, "microbatches": microbatches, "tag": tag,
+    }
+    try:
+        lowered, mesh, cfg, shape = lower_cell(
+            arch, shape_name, multi_pod=multi_pod, attn_impl=attn_impl,
+            microbatches=microbatches, extra_rules=extra_rules,
+            config_overrides=config_overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        coll = collective_bytes(hlo_text)
+        loop_aware = hlo_cost.analyze(hlo_text)
+        n_dev = mesh.devices.size
+        rec.update({
+            "ok": True,
+            "devices": n_dev,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "matmul_flops_per_device": loop_aware["matmul_flops"],
+            "hbm_bytes_per_device": loop_aware["hbm_bytes"],
+            "collective_bytes_per_device": loop_aware["collective_bytes"],
+            "collective_bytes_by_op": loop_aware["collective_bytes_by_op"],
+            "artifact_f32_upcast_bytes": f32_twin_bytes(hlo_text),
+            "peak_memory_per_device": getattr(
+                mem, "temp_size_in_bytes", 0) + getattr(
+                mem, "argument_size_in_bytes", 0) + getattr(
+                mem, "output_size_in_bytes", 0) - getattr(
+                mem, "alias_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "collectives": coll,
+            "params": cfg.param_count(),
+            "active_params": cfg.active_param_count(),
+            "tokens": shape.global_batch * (shape.seq_len
+                                            if shape.mode != "decode" else 1),
+            "mode": shape.mode,
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+    finally:
+        sh.set_mesh(None)
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def append_result(rec: Dict[str, Any], path: Optional[str] = None) -> None:
+    path = path or os.path.join(os.path.abspath(RESULTS), "dryrun.jsonl")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--attn-impl", default="full", choices=["full", "tri"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in shape_cells(a):
+                cells.append((a, s.name))
+            for s in skipped_cells(a):
+                append_result({"arch": a, "shape": s, "ok": None,
+                               "skipped": "requires sub-quadratic attention "
+                               "(pure full-attention arch)"}, args.out)
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch/--shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape_name in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape_name, multi_pod=mp,
+                           attn_impl=args.attn_impl,
+                           microbatches=args.microbatches, tag=args.tag)
+            append_result(rec, args.out)
+            status = "OK " if rec.get("ok") else "FAIL"
+            print(f"[{status}] {arch:24s} {shape_name:12s} "
+                  f"{rec.get('mesh')} compile={rec.get('compile_s', '-')}s "
+                  f"flops={rec.get('flops', 0):.3e} "
+                  f"mem/dev={rec.get('peak_memory_per_device', 0)/2**30:.2f}GiB"
+                  if rec.get("ok") else
+                  f"[{status}] {arch} {shape_name}: {rec.get('error')}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,353 @@
+"""Loop-aware static cost analysis over compiled HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+undercounts scan-over-layers programs by ~num_layers x.  This module
+re-derives the three roofline inputs directly from the HLO:
+
+  * matmul FLOPs   — every ``dot`` (2 * prod(result dims) * prod(lhs
+                     contracting dims)), multiplied through enclosing
+                     while-loop trip counts (extracted from the loop
+                     condition's compare-against-constant);
+  * HBM bytes      — operand + result bytes at fusion/op boundaries
+                     (a fusion's internals stay in registers/VMEM; its
+                     boundary IS the HBM traffic model), loop-scaled;
+  * collective bytes — per collective op kind, loop-scaled.
+
+This is a structural model of the compiled program, not a simulation:
+it is exactly what the §Roofline terms need and is validated against
+closed-form FLOP counts in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+               "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->", re.M)
+_OP_START = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_TYPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+_KIND = re.compile(r"\s*([\w\-]+)\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALLS = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w\.\-]+)")
+_BODY = re.compile(r"body=%?([\w\.\-]+)")
+_COND = re.compile(r"condition=%?([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CONSTANT = re.compile(r"constant\((\d+)\)")
+_TRIP_HINT = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+
+def _shape_bytes(dtype: str, dims: Optional[str]) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = DTYPE_BYTES[dtype]
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _shape_elems(dims: Optional[str]) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    dtype: Optional[str]
+    dims: Optional[str]
+    is_tuple: bool
+    tuple_type: str
+    operands: List[str]
+    attrs: str
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, Tuple[Optional[str], Optional[str]]] = \
+        field(default_factory=dict)   # op name -> (dtype, dims)
+
+
+def _parse_op_line(line: str) -> Optional[Op]:
+    m = _OP_START.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    dtype = dims = None
+    tuple_type = ""
+    is_tuple = rest.startswith("(")
+    if is_tuple:
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        tuple_type = rest[:end]
+        rest = rest[end:]
+    else:
+        tm = _TYPE.match(rest)
+        if tm:
+            dtype, dims = tm.group(1), tm.group(2)
+            rest = rest[tm.end():]
+        elif rest.startswith("token[]"):
+            rest = rest[7:]
+    km = _KIND.match(rest)
+    if not km:
+        return None
+    kind = km.group(1)
+    # operand list runs to the matching close paren (no nested parens occur
+    # in operand lists except constant literals, which have no commas+%).
+    args_start = km.end()
+    depth = 1
+    i = args_start
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    operand_str = rest[args_start:i - 1]
+    attrs = rest[i:]
+    operands = []
+    for piece in operand_str.split(","):
+        piece = piece.strip()
+        if piece.startswith("%"):
+            operands.append(piece[1:])
+        else:
+            sm = re.match(r"[a-z0-9]+\[[0-9,]*\][^ ]*\s+%?([\w\.\-]+)", piece)
+            if sm:
+                operands.append(sm.group(1))
+    return Op(name, kind, dtype, dims, is_tuple, tuple_type, operands,
+              attrs, line)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and "->" in line and "{" in line:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        op = _parse_op_line(line)
+        if op is None:
+            continue
+        cur.ops.append(op)
+        if not op.is_tuple:
+            cur.shapes[op.name] = (op.dtype, op.dims)
+    return comps
+
+
+# HBM-traffic model per op kind (fusion boundaries = HBM roundtrips):
+#   full:   operands + result cross HBM
+#   result: only the result (+indices) moves (slicing ops read a window)
+#   update: dynamic-update-slice/scatter touch ~2x the update operand
+_BYTES_FULL = {"fusion", "dot", "convolution", "reduce", "sort",
+               "concatenate", "pad", "select-and-scatter", "cholesky",
+               "triangular-solve"} | set(COLLECTIVES) | {
+                   c + "-start" for c in COLLECTIVES}
+_BYTES_RESULT = {"dynamic-slice", "gather", "slice", "broadcast", "iota",
+                 "copy", "transpose"}
+_BYTES_UPDATE = {"dynamic-update-slice", "scatter"}
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    {o: v * k for o, v in self.coll.items()})
+
+    def add(self, other: "Cost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for o, v in other.coll.items():
+            self.coll[o] = self.coll.get(o, 0.0) + v
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, Cost] = {}
+        entry = None
+        # the ENTRY line loses its marker in parse; detect via text
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+        self.entry = m.group(1) if m else next(iter(self.comps), None)
+
+    # -- trip count ----------------------------------------------------------
+    def trip_count(self, while_op: "Op", cond_name: str) -> int:
+        hint = _TRIP_HINT.search(while_op.raw)
+        if hint:
+            return int(hint.group(1))
+        comp = self.comps.get(cond_name)
+        if comp is None:
+            return 1
+        consts = [int(m.group(1)) for op in comp.ops
+                  for m in [_CONSTANT.search(op.raw)] if m]
+        return max(consts) if consts else 1
+
+    # -- per-op flops ------------------------------------------------------------
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        out = _shape_elems(op.dims)
+        m = _CONTRACT.search(op.attrs)
+        k = 1
+        if m and op.operands:
+            lhs = comp.shapes.get(op.operands[0])
+            if lhs and lhs[1]:
+                lhs_dims = [int(d) for d in lhs[1].split(",")]
+                for idx in (m.group(1).split(",") if m.group(1) else []):
+                    i = int(idx)
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+        return 2.0 * out * k
+
+    # -- computation cost (memoized, loop-aware) -----------------------------------
+    def cost_of(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = Cost()
+        self._memo[name] = total  # break cycles defensively
+        if comp is None:
+            return total
+        for op in comp.ops:
+            if op.kind == "dot":
+                total.flops += self._dot_flops(comp, op)
+            base_kind = op.kind[:-6] if op.kind.endswith("-start") else op.kind
+            if base_kind in COLLECTIVES:
+                b = _shape_bytes(op.dtype, op.dims) if not op.is_tuple else \
+                    self._tuple_bytes(op)
+                total.coll[base_kind] = total.coll.get(base_kind, 0.0) + b
+            if op.kind in _BYTES_FULL:
+                b = (_shape_bytes(op.dtype, op.dims)
+                     if not op.is_tuple else self._tuple_bytes(op))
+                sliced = (self._sliced_params(op)
+                          if op.kind == "fusion" else {})
+                # in-place pattern: a fusion that updates a buffer (scan
+                # carry / KV-cache dynamic-update-slice) has one operand of
+                # identical shape+dtype to its result — XLA aliases it, so
+                # only the updated window actually moves.  Discount one
+                # same-shaped operand AND the result down to zero (the DUS
+                # update itself is charged via its own small operands).
+                aliased = False
+                result_sig = (op.dtype, op.dims) if not op.is_tuple else None
+                for i, o in enumerate(op.operands):
+                    if i in sliced:
+                        b += sliced[i]      # window read, not the full buffer
+                        continue
+                    sh = comp.shapes.get(o)
+                    if sh:
+                        if (op.kind == "fusion" and not aliased
+                                and result_sig is not None
+                                and sh == result_sig):
+                            aliased = True
+                            b -= _shape_bytes(*result_sig)  # result is in-place
+                            continue
+                        b += _shape_bytes(sh[0], sh[1])
+                total.bytes += max(b, 0)
+            elif op.kind in _BYTES_RESULT:
+                total.bytes += (_shape_bytes(op.dtype, op.dims) * 2
+                                if not op.is_tuple else
+                                self._tuple_bytes(op) * 2)
+            elif op.kind in _BYTES_UPDATE and len(op.operands) >= 2:
+                sh = comp.shapes.get(op.operands[1])
+                if sh:
+                    total.bytes += 2 * _shape_bytes(sh[0], sh[1])
+            if op.kind == "while":
+                bm = _BODY.search(op.attrs)
+                cm = _COND.search(op.attrs)
+                if bm:
+                    trips = self.trip_count(op, cm.group(1) if cm else "")
+                    total.add(self.cost_of(bm.group(1)).scaled(trips))
+            elif op.kind in ("fusion", "call", "custom-call", "map",
+                             "conditional", "reduce", "sort", "scatter",
+                             "select-and-scatter", "reduce-window"):
+                for sub in _CALLS.findall(op.attrs):
+                    if sub in self.comps and sub != name:
+                        total.add(self.cost_of(sub))
+        return total
+
+    def _sliced_params(self, op: Op) -> Dict[int, int]:
+        """For a fusion op: parameter indices that are only read through a
+        dynamic-slice/gather/slice inside the fused computation, mapped to
+        the bytes of the sliced window (the actual HBM read)."""
+        m = _CALLS.search(op.attrs)
+        if not m:
+            return {}
+        sub = self.comps.get(m.group(1))
+        if sub is None:
+            return {}
+        # parameter name -> index
+        pidx: Dict[str, int] = {}
+        for o in sub.ops:
+            if o.kind == "parameter":
+                try:
+                    pidx[o.name] = int(o.raw.rsplit("parameter(", 1)[1]
+                                       .split(")")[0])
+                except (IndexError, ValueError):
+                    pass
+        reads: Dict[int, int] = {}
+        direct: set = set()
+        for o in sub.ops:
+            for j, operand in enumerate(o.operands):
+                if operand not in pidx:
+                    continue
+                idx = pidx[operand]
+                if o.kind in ("dynamic-slice", "gather", "slice") and j == 0:
+                    reads[idx] = reads.get(idx, 0) + _shape_bytes(
+                        o.dtype, o.dims)
+                else:
+                    direct.add(idx)
+        return {i: b for i, b in reads.items() if i not in direct}
+
+    def _tuple_bytes(self, op: Op) -> int:
+        total = 0
+        for m in _SHAPE.finditer(op.tuple_type):
+            total += _shape_bytes(m.group(1), m.group(2))
+        return total
+
+    def entry_cost(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> Dict[str, object]:
+    model = HloCostModel(hlo_text)
+    c = model.entry_cost()
+    return {
+        "matmul_flops": c.flops,
+        "hbm_bytes": c.bytes,
+        "collective_bytes_by_op": dict(c.coll),
+        "collective_bytes": sum(c.coll.values()),
+    }

@@ -1,0 +1,74 @@
+"""Input ShapeDtypeStructs / dummy batches for every (arch × shape) cell.
+
+``input_specs`` is the dry-run contract: weak-type-correct, shardable
+stand-ins with NO device allocation.  ``dummy_batch`` materializes small
+concrete batches for smoke tests and examples.
+
+Modality frontends are stubs per the assignment: whisper gets precomputed
+frame embeddings, internvl2 gets precomputed patch embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _tok(b: int, s: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    dtype = jnp.dtype(cfg.dtype)
+    if shape.mode == "train":
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct((b, cfg.audio_frames, d),
+                                                   dtype),
+                    "tokens": _tok(b, s), "labels": _tok(b, s)}
+        if cfg.family == "vlm":
+            st = s - cfg.vision_tokens
+            return {"image_embeds": jax.ShapeDtypeStruct(
+                        (b, cfg.vision_tokens, d), dtype),
+                    "tokens": _tok(b, st), "labels": _tok(b, st)}
+        return {"tokens": _tok(b, s), "labels": _tok(b, s)}
+    if shape.mode == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct((b, cfg.audio_frames, d),
+                                                   dtype),
+                    "tokens": _tok(b, s)}
+        if cfg.family == "vlm":
+            return {"image_embeds": jax.ShapeDtypeStruct(
+                        (b, cfg.vision_tokens, d), dtype),
+                    "tokens": _tok(b, s - cfg.vision_tokens)}
+        return {"tokens": _tok(b, s)}
+    # decode: one new token against a cache of length seq_len
+    return {"tokens": _tok(b, 1)}
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, tuple]:
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def dummy_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0
+                ) -> Dict[str, jax.Array]:
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, spec in input_specs(cfg, shape).items():
+        if spec.dtype == jnp.int32:
+            out[k] = jnp.asarray(
+                rng.integers(0, cfg.vocab, size=spec.shape, dtype=np.int32))
+        else:
+            out[k] = jnp.asarray(
+                rng.standard_normal(spec.shape, dtype=np.float32) * 0.02,
+                dtype=spec.dtype)
+    return out

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state.  The dry-run entry
+point sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before
+any jax import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(model_axis: int = 1) -> Mesh:
+    """Mesh over whatever devices exist (CPU tests: usually (1,1))."""
+    n = len(jax.devices())
+    data = max(1, n // model_axis)
+    return jax.make_mesh((data, model_axis), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+HARDWARE = {
+    # TPU v5e per chip
+    "peak_bf16_flops": 197e12,       # FLOP/s
+    "hbm_bandwidth": 819e9,          # B/s
+    "ici_link_bandwidth": 50e9,      # B/s per link
+    "hbm_bytes": 16 * 1024**3,
+}

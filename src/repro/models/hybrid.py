@@ -1,0 +1,229 @@
+"""Hybrid SSM + shared-attention backbone (zamba2-style).
+
+N Mamba-2 blocks with ONE shared transformer block (attention + MLP whose
+weights are reused) invoked every ``cfg.shared_attn_every`` SSM blocks.
+The SSM stack is scanned in groups so the shared block can be interleaved
+without unrolling all layers: ceil(N/k) groups of (<=k scanned mamba
+layers, then the shared block).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from . import ssm as S
+
+Params = Dict[str, Any]
+
+
+def _norm(cfg, abstract):
+    if abstract:
+        return jax.ShapeDtypeStruct((cfg.d_model,), L.dt(cfg))
+    return jnp.ones((cfg.d_model,), L.dt(cfg))
+
+
+def _ssm_layer_params(cfg, rng, abstract):
+    return {"ln": _norm(cfg, abstract),
+            "mamba": S.mamba_params(cfg, rng, abstract)}
+
+
+def init_params(cfg: ModelConfig, rng=None, abstract: bool = False) -> Params:
+    if abstract:
+        one = _ssm_layer_params(cfg, None, True)
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.num_layers,) + s.shape,
+                                           s.dtype), one)
+        r1 = r2 = r3 = None
+    else:
+        r0, r1, r2, r3 = jax.random.split(rng, 4)
+        rngs = jax.random.split(r0, cfg.num_layers)
+        stacked = jax.vmap(lambda r: _ssm_layer_params(cfg, r, False))(rngs)
+    out = {
+        "embed": L.embed_params(cfg, r3, abstract),
+        "layers": stacked,
+        "ln_f": _norm(cfg, abstract),
+    }
+    if cfg.shared_attn_every > 0:
+        out["shared"] = {
+            "ln1": _norm(cfg, abstract),
+            "attn": L.attention_params(cfg, r1, abstract),
+            "ln2": _norm(cfg, abstract),
+            "mlp": L.mlp_params(cfg, cfg.d_ff, r2, abstract),
+        }
+    return out
+
+
+def param_pspecs(cfg: ModelConfig) -> Params:
+    layer = {"ln": (None,), "mamba": S.mamba_specs(cfg)}
+    stacked = jax.tree.map(lambda sp: ("layers",) + tuple(sp), layer,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    out = {"embed": L.embed_specs(cfg), "layers": stacked, "ln_f": (None,)}
+    if cfg.shared_attn_every > 0:
+        out["shared"] = {"ln1": (None,), "attn": L.attention_specs(cfg),
+                         "ln2": (None,), "mlp": L.mlp_specs(cfg)}
+    return out
+
+
+def num_shared_sites(cfg: ModelConfig) -> int:
+    k = cfg.shared_attn_every
+    return (cfg.num_layers + k - 1) // k if k else 0
+
+
+def _group_bounds(cfg: ModelConfig):
+    k = cfg.shared_attn_every or cfg.num_layers
+    bounds = []
+    i = 0
+    while i < cfg.num_layers:
+        bounds.append((i, min(i + k, cfg.num_layers)))
+        i += k
+    return bounds
+
+
+def _slice_layers(params_stacked, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], params_stacked)
+
+
+def _shared_block(cfg, sp, x, positions, impl, cache=None, cache_index=None):
+    h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+    a, new_cache = L.attention(sp["attn"], h, cfg, positions=positions,
+                               causal=True, cache=cache,
+                               cache_index=cache_index, impl=impl)
+    x = x + a
+    h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+    return x + L.mlp(sp["mlp"], h, cfg), new_cache
+
+
+def backbone(params: Params, x: jax.Array, cfg: ModelConfig, *,
+             positions: jax.Array, impl: str = "full",
+             state: Optional[Dict] = None, attn_cache: Optional[Dict] = None,
+             cache_index=None) -> Tuple[jax.Array, Optional[Dict], Optional[Dict]]:
+    """state: stacked SSM states (L, ...); attn_cache: {"k","v"} with a
+    leading shared-site axis (G, B, S, hkv, hd)."""
+
+    decode = state is not None
+    new_states = [] if decode else None
+    new_k, new_v = ([], []) if attn_cache is not None else (None, None)
+
+    def ssm_body(carry, xs):
+        if decode:
+            lp, st = xs
+        else:
+            lp, st = xs, None
+        h = L.rms_norm(carry, lp["ln"], cfg.norm_eps)
+        out, new_st = S.mamba_forward(lp["mamba"], h, cfg, st)
+        res = carry + out
+        return res, (new_st if decode else None)
+
+    body = ssm_body if decode else _maybe_remat(cfg, ssm_body)
+    shared_fn = _shared_block
+    if not decode and cfg.remat != "none":
+        # the shared block is invoked at ~N/k unrolled sites; without remat
+        # every site's flash intermediates stay live through the backward
+        shared_fn = jax.checkpoint(
+            _shared_block, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(0, 4))
+
+    use_shared = cfg.shared_attn_every > 0
+    for g, (lo, hi) in enumerate(_group_bounds(cfg)):
+        lp = _slice_layers(params["layers"], lo, hi)
+        if decode:
+            st = jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi], state)
+            x, new_st = jax.lax.scan(body, x, (lp, st))
+            new_states.append(new_st)
+        else:
+            x, _ = jax.lax.scan(body, x, lp)
+        if not use_shared:
+            continue
+        cache_g = None
+        if attn_cache is not None:
+            cache_g = (attn_cache["k"][g], attn_cache["v"][g])
+        x, ncache = shared_fn(cfg, params["shared"], x, positions, impl,
+                              cache=cache_g, cache_index=cache_index)
+        if attn_cache is not None:
+            new_k.append(ncache[0])
+            new_v.append(ncache[1])
+
+    x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    out_state = (jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_states)
+                 if decode else None)
+    out_cache = ({"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+                 if (attn_cache is not None and use_shared) else attn_cache)
+    return x, out_state, out_cache
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def train_loss(params: Params, batch: Dict[str, jax.Array],
+               cfg: ModelConfig, *, impl: str = "full") -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = L.embed(params["embed"], tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    h, _, _ = backbone(params, x, cfg, positions=positions, impl=impl)
+    return L.chunked_ce_loss(params["embed"], h, labels, cfg)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    dtype = L.dt(cfg)
+    st = S.mamba_state_shapes(cfg, batch)
+    out = {
+        "state": {
+            "h": jax.ShapeDtypeStruct(
+                (cfg.num_layers,) + st["h"], jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.num_layers,) + st["conv"], dtype),
+        },
+    }
+    g = num_shared_sites(cfg)
+    if g:
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        out["attn"] = {
+            "k": jax.ShapeDtypeStruct((g, batch, max_len, hkv, hd), dtype),
+            "v": jax.ShapeDtypeStruct((g, batch, max_len, hkv, hd), dtype),
+        }
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig) -> Dict[str, Any]:
+    out = {
+        "state": {"h": ("layers", "batch", "heads", None, None)
+                  if cfg.mamba_version == 2 else
+                  ("layers", "batch", "ff", None),
+                  "conv": ("layers", "batch", None, "ff")},
+    }
+    if num_shared_sites(cfg):
+        out["attn"] = {"k": (None, "batch", "kv_seq", "kv_heads", None),
+                       "v": (None, "batch", "kv_seq", "kv_heads", None)}
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, max_len))
+
+
+def forward_with_cache(params: Params, tokens: jax.Array, cache: Dict,
+                       cfg: ModelConfig, cache_index, *,
+                       impl: str = "full") -> Tuple[jax.Array, Dict]:
+    x = L.embed(params["embed"], tokens, cfg)
+    s = x.shape[1]
+    positions = cache_index + jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+    h, new_state, new_attn = backbone(
+        params, x, cfg, positions=positions, impl=impl,
+        state=cache["state"], attn_cache=cache.get("attn"),
+        cache_index=cache_index)
+    logits = L.logits_fn(params["embed"], h[:, -1:], cfg)[:, 0]
+    out = {"state": new_state}
+    if new_attn is not None:
+        out["attn"] = new_attn
+    return logits, out

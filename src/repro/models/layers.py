@@ -1,0 +1,608 @@
+"""Model building blocks (pure JAX, shard-annotated, bf16-friendly).
+
+Attention comes in two lowering strategies:
+  * ``full``  — online-softmax flash over all (q-chunk, kv-chunk) pairs
+                with causal masking (baseline; wastes ~2x score FLOPs on
+                masked pairs, like a naive jnp implementation would);
+  * ``tri``   — statically enumerated lower-triangular chunk pairs
+                (exact-FLOP causal flash; the §Perf optimized path).
+On real TPUs ``repro.kernels.flash_attention`` replaces both; the jnp
+paths double as its oracle and as the dry-run lowering.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import shard
+
+Params = Dict[str, Any]
+
+
+def dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    orig = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(orig)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (jnp reference paths; see repro.kernels for the TPU kernel)
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, groups, d)) \
+        .reshape(b, s, h * groups, d)
+
+
+def _attn_block(q, k, v, m, l, acc, mask=None):
+    """One online-softmax step. q:(B,H,Cq,hd) k,v:(B,H,Ck,hd)."""
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * (1.0 / math.sqrt(q.shape[-1]))
+    if mask is not None:
+        s = jnp.where(mask, s, -1e30)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l_new = l * alpha + p.sum(axis=-1)
+    acc_new = acc * alpha[..., None] + jnp.einsum(
+        "bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, chunk: int = 512,
+                    impl: str = "full") -> jax.Array:
+    """q: (B,Sq,H,hd), k/v: (B,Sk,Hkv,hd) -> (B,Sq,H,hd)."""
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    qt = jnp.swapaxes(q, 1, 2)              # (B,H,Sq,hd)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if impl == "tri" and causal and sq == sk and sq % chunk == 0:
+        return _flash_tri(qt, kt, vt, chunk).swapaxes(1, 2)
+    return _flash_full(qt, kt, vt, causal, chunk, sq, sk).swapaxes(1, 2)
+
+
+def _flash_full(qt, kt, vt, causal, chunk, sq, sk):
+    b, h, _, hd = qt.shape
+    hv = vt.shape[-1]
+    ck = min(chunk, sk)
+    nk = (sk + ck - 1) // ck
+    pad = nk * ck - sk
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kt.reshape(b, h, nk, ck, hd)
+    vb = vt.reshape(b, h, nk, ck, hv)
+    q_pos = jnp.arange(sq)
+
+    def step(carry, j):
+        m, l, acc = carry
+        kj = kb[:, :, j]
+        vj = vb[:, :, j]
+        k_pos = j * ck + jnp.arange(ck)
+        mask = (k_pos[None, :] < sk)
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        m, l, acc = _attn_block(qt, kj, vj, m, l, acc,
+                                mask=mask[None, None, :, :])
+        return (m, l, acc), None
+
+    init = (jnp.full((b, h, sq), -1e30, jnp.float32),
+            jnp.zeros((b, h, sq), jnp.float32),
+            jnp.zeros((b, h, sq, hv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(nk))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qt.dtype)
+
+
+def _flash_tri(qt, kt, vt, chunk):
+    """Exact-FLOP causal flash: scan only lower-triangular chunk pairs."""
+    b, h, s, hd = qt.shape
+    hv = vt.shape[-1]
+    n = s // chunk
+    qb = qt.reshape(b, h, n, chunk, hd)
+    kb = kt.reshape(b, h, n, chunk, hd)
+    vb = vt.reshape(b, h, n, chunk, hv)
+    pairs = np.array([(i, j) for i in range(n) for j in range(i + 1)],
+                     dtype=np.int32)                       # (P, 2)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+
+    def step(carry, pair):
+        m, l, acc = carry                                   # (b,h,n,chunk[,hd])
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qb, i, axis=2, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, axis=2, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, axis=2, keepdims=False)
+        mi = jax.lax.dynamic_index_in_dim(m, i, axis=2, keepdims=False)
+        li = jax.lax.dynamic_index_in_dim(l, i, axis=2, keepdims=False)
+        ai = jax.lax.dynamic_index_in_dim(acc, i, axis=2, keepdims=False)
+        mask = jnp.where(i == j, tri, jnp.ones_like(tri))[None, None]
+        mi, li, ai = _attn_block(qi, kj, vj, mi, li, ai, mask=mask)
+        m = jax.lax.dynamic_update_index_in_dim(m, mi, i, axis=2)
+        l = jax.lax.dynamic_update_index_in_dim(l, li, i, axis=2)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, ai, i, axis=2)
+        return (m, l, acc), None
+
+    init = (jnp.full((b, h, n, chunk), -1e30, jnp.float32),
+            jnp.zeros((b, h, n, chunk), jnp.float32),
+            jnp.zeros((b, h, n, chunk, hv), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.asarray(pairs))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qt.dtype)
+    return out.reshape(b, h, s, hv)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: Optional[jax.Array] = None) -> jax.Array:
+    """Single-position attention over a KV cache.
+
+    q: (B,1,H,hd); caches: (B,S,Hkv,hd). ``length`` masks valid positions.
+    """
+    b, _, h, hd = q.shape
+    hkv = k_cache.shape[2]
+    k = _repeat_kv(k_cache, h // hkv)
+    v = _repeat_kv(v_cache, h // hkv)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(hd)
+    if length is not None:
+        pos = jnp.arange(k.shape[1])
+        s = jnp.where(pos[None, None, None, :] < length[:, None, None, None],
+                      s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA) attention layer
+# ---------------------------------------------------------------------------
+
+def attention_params(cfg: ModelConfig, rng=None, abstract=False,
+                     cross: bool = False) -> Params:
+    d, h, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    shapes = {
+        "wq": (d, h * hd),
+        "wk": (d, hkv * hd),
+        "wv": (d, hkv * hd),
+        "wo": (h * hd, d),
+    }
+    if cfg.qkv_bias:
+        shapes.update({"bq": (h * hd,), "bk": (hkv * hd,), "bv": (hkv * hd,)})
+    return _make(shapes, cfg, rng, abstract, fan_in=d)
+
+
+def attention_specs(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    sp = {"wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+          "wv": ("embed", "kv_heads"), "wo": ("heads", "embed")}
+    if cfg.qkv_bias:
+        sp.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)})
+    return sp
+
+
+def attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, causal: bool = True,
+              kv_x: Optional[jax.Array] = None,
+              kv_positions: Optional[jax.Array] = None,
+              cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_index: Optional[jax.Array] = None,
+              use_rope: bool = True,
+              impl: str = "full") -> Tuple[jax.Array, Optional[Tuple]]:
+    """GQA attention. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    src = x if kv_x is None else kv_x
+    q = (x @ params["wq"] + params.get("bq", 0)).reshape(b, s, h, hd)
+    k = (src @ params["wk"] + params.get("bk", 0)).reshape(b, src.shape[1], hkv, hd)
+    v = (src @ params["wv"] + params.get("bv", 0)).reshape(b, src.shape[1], hkv, hd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        kpos = positions if kv_positions is None else kv_positions
+        k = rope(k, kpos, cfg.rope_theta)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "kv_seq", "kv_heads", None)
+    v = shard(v, "batch", "kv_seq", "kv_heads", None)
+    new_cache = None
+    if cache is not None:
+        k_cache, v_cache = cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
+        new_cache = (k_cache, v_cache)
+        if s == 1:
+            out = decode_attention(q, k_cache, v_cache,
+                                   length=jnp.full((b,), cache_index + s))
+        else:
+            # prefill: attend over the fresh segment with flash (the cache
+            # is being filled from scratch) — never materialize S x S
+            out = flash_attention(q, k, v, causal=causal, impl=impl)
+    else:
+        out = flash_attention(q, k, v, causal=causal, impl=impl)
+    out = out.reshape(b, s, h * hd)
+    out = out @ params["wo"]
+    return shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (deepseek-v2) — compressed KV, shared rope key
+# ---------------------------------------------------------------------------
+
+def mla_params(cfg: ModelConfig, rng=None, abstract=False) -> Params:
+    d, h = cfg.d_model, cfg.num_heads
+    qk_n, qk_r, v_hd = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_head_dim
+    r_kv, r_q = cfg.mla_kv_lora, cfg.mla_q_lora
+    shapes = {
+        "w_dkv": (d, r_kv + qk_r),                 # compress kv + shared rope k
+        "w_ukv": (r_kv, h * (qk_n + v_hd)),        # decompress to k_nope, v
+        "wo": (h * v_hd, d),
+    }
+    if r_q:
+        shapes["w_dq"] = (d, r_q)
+        shapes["w_uq"] = (r_q, h * (qk_n + qk_r))
+    else:
+        shapes["wq"] = (d, h * (qk_n + qk_r))
+    return _make(shapes, cfg, rng, abstract, fan_in=d)
+
+
+def mla_specs(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    sp = {"w_dkv": ("embed", None), "w_ukv": (None, "heads"),
+          "wo": ("heads", "embed")}
+    if cfg.mla_q_lora:
+        sp.update({"w_dq": ("embed", None), "w_uq": (None, "heads")})
+    else:
+        sp["wq"] = ("embed", "heads")
+    return sp
+
+
+def mla_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
+                  positions: jax.Array,
+                  cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  impl: str = "full") -> Tuple[jax.Array, Optional[Tuple]]:
+    b, s, d = x.shape
+    h = cfg.num_heads
+    qk_n, qk_r, v_hd = cfg.mla_qk_nope_dim, cfg.mla_qk_rope_dim, cfg.mla_v_head_dim
+    r_kv = cfg.mla_kv_lora
+
+    if cfg.mla_q_lora:
+        q = (x @ params["w_dq"]) @ params["w_uq"]
+    else:
+        q = x @ params["wq"]
+    q = q.reshape(b, s, h, qk_n + qk_r)
+    q_nope, q_rope = q[..., :qk_n], q[..., qk_n:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ params["w_dkv"]                       # (b,s,r_kv+qk_r)
+    c_kv, k_rope = ckv[..., :r_kv], ckv[..., r_kv:]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None:
+        # MLA's serving win: cache only (c_kv, k_rope) — r_kv + qk_r per pos
+        c_cache, r_cache = cache
+        c_cache = jax.lax.dynamic_update_slice_in_dim(
+            c_cache, c_kv.astype(c_cache.dtype), cache_index, axis=1)
+        r_cache = jax.lax.dynamic_update_slice_in_dim(
+            r_cache, k_rope.astype(r_cache.dtype), cache_index, axis=1)
+        new_cache = (c_cache, r_cache)
+
+    if cache is not None and s == 1:
+        # absorbed decode: attention entirely in the compressed r_kv space
+        # (never materializes per-head K/V over the 32k cache)
+        w_ukv = params["w_ukv"].reshape(r_kv, h, qk_n + v_hd)
+        w_uk, w_uv = w_ukv[..., :qk_n], w_ukv[..., qk_n:]
+        q_c = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)     # (B,1,H,r_kv)
+        c_cache, r_cache = new_cache
+        scale = 1.0 / math.sqrt(qk_n + qk_r)
+        s_c = jnp.einsum("bshr,bTr->bhsT", q_c, c_cache,
+                         preferred_element_type=jnp.float32)
+        s_r = jnp.einsum("bshr,bTr->bhsT", q_rope, r_cache,
+                         preferred_element_type=jnp.float32)
+        scores = (s_c + s_r) * scale
+        pos = jnp.arange(c_cache.shape[1])
+        valid = pos[None, None, None, :] < (cache_index + 1)
+        scores = jnp.where(valid, scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1).astype(c_cache.dtype)
+        out_c = jnp.einsum("bhsT,bTr->bshr", p, c_cache)     # (B,1,H,r_kv)
+        out = jnp.einsum("bshr,rhv->bshv", out_c, w_uv)
+    else:
+        # train / prefill: expand K/V for this segment and run flash
+        kv = (c_kv @ params["w_ukv"]).reshape(b, s, h, qk_n + v_hd)
+        k_nope, v = kv[..., :qk_n], kv[..., qk_n:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (*k_nope.shape[:3], qk_r))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qf = shard(qf, "batch", "seq", "heads", None)
+        k = shard(k, "batch", "kv_seq", "heads", None)
+        v = shard(v, "batch", "kv_seq", "heads", None)
+        out = flash_attention(qf, k, v, causal=True, impl=impl)
+    out = out.reshape(b, s, h * v_hd) @ params["wo"]
+    return shard(out, "batch", "seq", "act_embed"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    return jax.nn.gelu
+
+
+def mlp_params(cfg: ModelConfig, d_ff: int, rng=None, abstract=False) -> Params:
+    d = cfg.d_model
+    shapes = {"w1": (d, d_ff), "w2": (d_ff, d)}
+    if cfg.act == "silu":
+        shapes["w3"] = (d, d_ff)
+    return _make(shapes, cfg, rng, abstract, fan_in=d)
+
+
+def mlp_specs(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    sp = {"w1": ("embed", "ff"), "w2": ("ff", "embed")}
+    if cfg.act == "silu":
+        sp["w3"] = ("embed", "ff")
+    return sp
+
+
+def mlp(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    act = _act(cfg.act)
+    h = act(x @ params["w1"])
+    if "w3" in params:
+        h = h * (x @ params["w3"])
+    h = shard(h, "batch", "seq", "ff")
+    out = h @ params["w2"]
+    return shard(out, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE block — sort-based dropping dispatch (GShard-style capacity), EP over
+# the "experts" logical axis.  Expert-to-shard placement is a consistent-hash
+# permutation from repro.runtime.placement (the D1HT ring decides ownership).
+# ---------------------------------------------------------------------------
+
+def moe_params(cfg: ModelConfig, rng=None, abstract=False) -> Params:
+    d, e, f = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    shapes = {
+        "router": (d, e),
+        "w1": (e, d, f),
+        "w2": (e, f, d),
+    }
+    if cfg.act == "silu":
+        shapes["w3"] = (e, d, f)
+    if cfg.moe_weight_dtype == "int8":
+        p = _make(shapes, cfg, rng, abstract, fan_in=d)
+        out: Params = {"router": p["router"]}
+        for name in ("w1", "w2", "w3"):
+            if name not in p:
+                continue
+            if abstract:
+                out[name] = jax.ShapeDtypeStruct(shapes[name], jnp.int8)
+                out[name + "_scale"] = jax.ShapeDtypeStruct((e,), jnp.float32)
+            else:
+                w = p[name].astype(jnp.float32)
+                scale = jnp.max(jnp.abs(w), axis=(1, 2)) / 127.0 + 1e-12
+                out[name] = jnp.clip(jnp.round(w / scale[:, None, None]),
+                                     -127, 127).astype(jnp.int8)
+                out[name + "_scale"] = scale
+        if cfg.moe_shared_experts:
+            fs = cfg.moe_shared_experts * f
+            sh_shapes = {"sw1": (d, fs), "sw2": (fs, d)}
+            if cfg.act == "silu":
+                sh_shapes["sw3"] = (d, fs)
+            out.update(_make(sh_shapes, cfg, rng, abstract, fan_in=d))
+        return out
+    if cfg.moe_shared_experts:
+        fs = cfg.moe_shared_experts * f
+        shapes.update({"sw1": (d, fs), "sw2": (fs, d)})
+        if cfg.act == "silu":
+            shapes["sw3"] = (d, fs)
+    return _make(shapes, cfg, rng, abstract, fan_in=d)
+
+
+def moe_specs(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    sp = {"router": ("embed", None),
+          "w1": ("experts", "moe_embed", "moe_ff"),
+          "w2": ("experts", "moe_ff", "moe_embed")}
+    if cfg.act == "silu":
+        sp["w3"] = ("experts", "moe_embed", "moe_ff")
+    if cfg.moe_weight_dtype == "int8":
+        for name in ("w1", "w2", "w3"):
+            if name in sp:
+                sp[name + "_scale"] = ("experts",)
+    if cfg.moe_shared_experts:
+        sp.update({"sw1": ("embed", "ff"), "sw2": ("ff", "embed")})
+        if cfg.act == "silu":
+            sp["sw3"] = ("embed", "ff")
+    return sp
+
+
+def moe_block(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B,S,d). Per-batch-row grouped dispatch with capacity dropping."""
+    b, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    cap = max(1, int(math.ceil(s * k * cfg.moe_capacity_factor / e)))
+
+    gate_logits = jnp.einsum("bsd,de->bse", x, params["router"],
+                             preferred_element_type=jnp.float32)
+    weights, ids = jax.lax.top_k(jax.nn.softmax(gate_logits, axis=-1), k)
+    weights = weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+
+    flat_ids = ids.reshape(b, s * k)                       # (B, S*k)
+    flat_w = weights.reshape(b, s * k).astype(x.dtype)
+    token_of_slot = jnp.broadcast_to(
+        jnp.arange(s)[:, None], (s, k)).reshape(s * k)
+
+    order = jnp.argsort(flat_ids, axis=-1)                 # per-row sort
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    sorted_tok = token_of_slot[order]                      # (B, S*k)
+    sorted_w = jnp.take_along_axis(flat_w, order, axis=-1)
+    # within-expert rank of each sorted slot
+    pos = jnp.arange(s * k)
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(e)))(
+        sorted_ids)                                        # (B, E)
+    rank = pos[None, :] - jnp.take_along_axis(starts, sorted_ids, axis=-1)
+    # overflow slots get rank=cap, an out-of-bounds index dropped by scatter
+    rank_c = jnp.where(rank < cap, rank, cap)
+
+    # Index-only dispatch: build a slot->token map (B,E,C) so one gather
+    # fills the expert slots and one scatter-add combines them — no
+    # (B, S*k, d) token-copy intermediates (6x-activation-sized; they blew
+    # up the 236B dry-runs).
+    bi = jnp.broadcast_to(jnp.arange(b)[:, None], sorted_ids.shape)
+    tok_for_slot = jnp.full((b, e, cap), s, jnp.int32)      # s = OOB sentinel
+    tok_for_slot = tok_for_slot.at[bi, sorted_ids, rank_c].set(
+        sorted_tok, mode="drop")
+    w_for_slot = jnp.zeros((b, e, cap), x.dtype).at[
+        bi, sorted_ids, rank_c].set(sorted_w, mode="drop")
+
+    xin = jnp.take_along_axis(
+        x, tok_for_slot.reshape(b, e * cap)[..., None], axis=1,
+        mode="fill", fill_value=0)
+    xin = shard(xin.reshape(b, e, cap, d), "batch", "experts", None, None)
+
+    act = _act(cfg.act)
+
+    def ew(name):
+        w = params[name]
+        if w.dtype == jnp.int8:   # serving quantization: dequant after move
+            # pin the INT8 tensor to the post-gather sharding so the FSDP
+            # all-gather moves 1-byte weights, not the bf16 dequant output
+            w = shard(w, "experts", None, None)
+            w = w.astype(x.dtype) * params[name + "_scale"].astype(
+                x.dtype)[:, None, None]
+        return w
+
+    h = act(jnp.einsum("becd,edf->becf", xin, ew("w1")))
+    if "w3" in params:
+        h = h * jnp.einsum("becd,edf->becf", xin, ew("w3"))
+    h = shard(h, "batch", "experts", None, None)
+    eout = jnp.einsum("becf,efd->becd", h, ew("w2"))
+    eout = eout * w_for_slot[..., None]
+    eout = shard(eout, "batch", "experts", None, None)
+
+    # one scatter-add combines slots back to tokens (OOB sentinel dropped)
+    bi3 = jnp.broadcast_to(jnp.arange(b)[:, None, None], (b, e, cap))
+    out = jnp.zeros((b, s, d), x.dtype).at[bi3, tok_for_slot].add(
+        eout, mode="drop")
+
+    if cfg.moe_shared_experts:
+        hs = act(x @ params["sw1"])
+        if "sw3" in params:
+            hs = hs * (x @ params["sw3"])
+        out = out + hs @ params["sw2"]
+    return shard(out, "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_params(cfg: ModelConfig, rng=None, abstract=False) -> Params:
+    shapes = {"embedding": (cfg.vocab, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.d_model, cfg.vocab)
+    return _make(shapes, cfg, rng, abstract, fan_in=cfg.d_model, std=0.02)
+
+
+def embed_specs(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    sp = {"embedding": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ("embed", "vocab")
+    return sp
+
+
+def embed(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    out = jnp.take(params["embedding"], tokens, axis=0).astype(dt(cfg))
+    return shard(out, "batch", "seq", "act_embed")
+
+
+def logits_fn(params: Params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = params["lm_head"] if "lm_head" in params else params["embedding"].T
+    return jnp.einsum("bsd,dv->bsv", h, w,
+                      preferred_element_type=jnp.float32)
+
+
+def chunked_ce_loss(params: Params, h: jax.Array, labels: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """Cross entropy without materializing (B,S,V) at once."""
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    n = s // c
+    hc = h[:, :n * c].reshape(b, n, c, d).swapaxes(0, 1)       # (n,B,c,d)
+    lc = labels[:, :n * c].reshape(b, n, c).swapaxes(0, 1)
+
+    def step(tot, xs):
+        hx, lx = xs
+        logits = logits_fn(params, hx, cfg)                    # (B,c,V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lx[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    tot, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hc, lc))
+    return tot / (b * n * c)
+
+
+# ---------------------------------------------------------------------------
+# param construction helper
+# ---------------------------------------------------------------------------
+
+def _make(shapes: Dict[str, Tuple[int, ...]], cfg: ModelConfig, rng,
+          abstract: bool, fan_in: int, std: Optional[float] = None) -> Params:
+    out: Params = {}
+    dtype = dt(cfg)
+    keys = (jax.random.split(rng, len(shapes))
+            if (rng is not None and not abstract) else [None] * len(shapes))
+    for (name, shape), key in zip(sorted(shapes.items()), keys):
+        if abstract:
+            out[name] = jax.ShapeDtypeStruct(shape, dtype)
+        else:
+            scale = std if std is not None else 1.0 / math.sqrt(fan_in)
+            if len(shape) == 1:
+                out[name] = jnp.zeros(shape, dtype)
+            else:
+                out[name] = (jax.random.normal(key, shape, jnp.float32)
+                             * scale).astype(dtype)
+    return out

@@ -1,0 +1,91 @@
+"""Unified model facade dispatching on ModelConfig.family.
+
+Public surface used by train/serve/launch:
+
+    m = Model(cfg)
+    params   = m.init(rng)                      # real weights (small cfgs)
+    aparams  = m.abstract_params()              # ShapeDtypeStructs (dry-run)
+    pspecs   = m.param_pspecs()                 # logical-axis tuples
+    loss     = m.train_loss(params, batch)
+    logits, cache = m.prefill(params, batch)    # fills the KV/SSM cache
+    logits, cache = m.decode_step(params, cache, tokens, index)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import encdec, hybrid, transformer
+
+Params = Dict[str, Any]
+
+
+def _module(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec
+    if cfg.family in ("ssm", "hybrid"):
+        return hybrid
+    return transformer        # dense | moe | vlm
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    attn_impl: str = "full"   # "full" (baseline) | "tri" (§Perf optimized)
+
+    # -- parameters ----------------------------------------------------------
+    def init(self, rng) -> Params:
+        return _module(self.cfg).init_params(self.cfg, rng, abstract=False)
+
+    def abstract_params(self) -> Params:
+        return _module(self.cfg).init_params(self.cfg, None, abstract=True)
+
+    def param_pspecs(self) -> Params:
+        return _module(self.cfg).param_pspecs(self.cfg)
+
+    # -- training --------------------------------------------------------------
+    def train_loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        return _module(self.cfg).train_loss(params, batch, self.cfg,
+                                            impl=self.attn_impl)
+
+    # -- serving ----------------------------------------------------------------
+    def cache_shapes(self, batch: int, max_len: int):
+        return _module(self.cfg).cache_shapes(self.cfg, batch, max_len)
+
+    def cache_pspecs(self):
+        return _module(self.cfg).cache_pspecs(self.cfg)
+
+    def init_cache(self, batch: int, max_len: int):
+        return _module(self.cfg).init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, params: Params, batch: Dict[str, jax.Array],
+                cache) -> Tuple[jax.Array, Any]:
+        """Process the prompt, filling the cache from position 0."""
+        cfg = self.cfg
+        mod = _module(cfg)
+        idx = jnp.zeros((), jnp.int32)
+        if cfg.family == "encdec":
+            return mod.forward_with_cache(params, batch["tokens"], cache, cfg,
+                                          idx, frames=batch["frames"],
+                                          impl=self.attn_impl)
+        if cfg.family == "vlm":
+            return mod.forward_with_cache(params, batch["tokens"], cache, cfg,
+                                          idx,
+                                          image_embeds=batch["image_embeds"],
+                                          impl=self.attn_impl)
+        return mod.forward_with_cache(params, batch["tokens"], cache, cfg,
+                                      idx, impl=self.attn_impl)
+
+    def decode_step(self, params: Params, cache, tokens: jax.Array,
+                    index) -> Tuple[jax.Array, Any]:
+        """One token per sequence; ``index`` is the current cache length."""
+        return _module(self.cfg).forward_with_cache(
+            params, tokens, cache, self.cfg, index, impl=self.attn_impl)
+
+    # -- dry-run helpers ------------------------------------------------------------
+    def param_count(self) -> int:
+        return self.cfg.param_count()

@@ -1,0 +1,171 @@
+"""Expert-parallel MoE with explicit all-to-all dispatch (shard_map).
+
+The GSPMD-lowered einsum/scatter MoE (layers.moe_block) lets the SPMD
+partitioner guess how to move tokens to experts; on the 236B configs it
+guesses badly — it replicates the combine scatter across the global batch
+and all-reduces (B,S,d) twice per layer (~3 TB/device/step measured,
+EXPERIMENTS.md §Perf-B).  This module is the production formulation:
+
+  * tokens are sharded over BOTH mesh axes (batch over data, sequence
+    over model) so each device owns T_loc = tokens/(data*model) rows;
+  * routing is computed locally; slots are binned by destination EP
+    shard into fixed-capacity buffers (C2 = T_loc*k*cf/M);
+  * ONE lax.all_to_all ships rows to expert owners, local sort+capacity
+    places them into (E_loc, C3, d) slabs for MXU einsums, and the
+    reverse all_to_all brings outputs home — per-device collective volume
+    is the theoretical T_loc*k*d*cf per direction, nothing replicated;
+  * everything inside shard_map is local jnp — no partitioner guessing —
+    and the whole block is differentiable (all_to_all transposes to
+    all_to_all).
+
+Expert-to-shard ownership follows the D1HT ring via
+repro.runtime.placement (consistent hashing decides which EP shard owns
+which expert; on elastic events only the affected arc of experts moves).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.sharding import specs as sh
+
+Params = Dict[str, Any]
+
+
+def _act(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    return jax.nn.gelu
+
+
+def _local_moe(x_loc: jax.Array, router: jax.Array, w1, w2, w3, *,
+               cfg: ModelConfig, m_shards: int, axis: str) -> jax.Array:
+    """Per-device body. x_loc: (T_loc, d); w*: local (E_loc, d, f) shards."""
+    t, d = x_loc.shape
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    e_loc = e // m_shards
+    cf = cfg.moe_capacity_factor
+    c2 = max(1, int(math.ceil(t * k * cf / m_shards)))      # per-dst slots
+    c3 = max(1, int(math.ceil(m_shards * c2 * 1.0 / e_loc)))  # local slab
+
+    gate = jnp.einsum("td,de->te", x_loc, router,
+                      preferred_element_type=jnp.float32)
+    weights, ids = jax.lax.top_k(jax.nn.softmax(gate, axis=-1), k)
+    weights = (weights / jnp.clip(weights.sum(-1, keepdims=True), 1e-9)
+               ).astype(x_loc.dtype)
+
+    flat_ids = ids.reshape(t * k)
+    flat_w = weights.reshape(t * k)
+    tok = jnp.repeat(jnp.arange(t), k)
+    dst = flat_ids // e_loc                                  # target shard
+
+    order = jnp.argsort(dst)
+    sdst = dst[order]
+    stok = tok[order]
+    sid = flat_ids[order] % e_loc                            # local expert @dst
+    sw = flat_w[order]
+    pos = jnp.arange(t * k)
+    starts = jnp.searchsorted(sdst, jnp.arange(m_shards))
+    rank = pos - starts[sdst]
+    rank_c = jnp.where(rank < c2, rank, c2)                  # c2 = OOB drop
+
+    send_x = jnp.zeros((m_shards, c2, d), x_loc.dtype).at[
+        sdst, rank_c].set(x_loc[stok], mode="drop")
+    send_e = jnp.full((m_shards, c2), e_loc, jnp.int32).at[
+        sdst, rank_c].set(sid, mode="drop")                  # e_loc = empty
+
+    recv_x = jax.lax.all_to_all(send_x, axis, split_axis=0,
+                                concat_axis=0, tiled=True)
+    recv_e = jax.lax.all_to_all(send_e, axis, split_axis=0,
+                                concat_axis=0, tiled=True)
+
+    rows = recv_x.reshape(m_shards * c2, d)
+    eids = recv_e.reshape(m_shards * c2)                     # e_loc = empty
+    order2 = jnp.argsort(eids)
+    s2 = eids[order2]
+    starts2 = jnp.searchsorted(s2, jnp.arange(e_loc))
+    rank2 = jnp.arange(rows.shape[0]) - starts2[jnp.clip(s2, 0, e_loc - 1)]
+    rank2_c = jnp.where((rank2 < c3) & (s2 < e_loc), rank2, c3)
+
+    xin = jnp.zeros((e_loc, c3, d), x_loc.dtype).at[
+        s2, rank2_c].set(rows[order2], mode="drop")
+
+    act = _act(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", xin, w1))
+    if w3 is not None:
+        h = h * jnp.einsum("ecd,edf->ecf", xin, w3)
+    eout = jnp.einsum("ecf,efd->ecd", h, w2)
+
+    valid2 = (s2 < e_loc) & (rank2 < c3)
+    gathered = eout[jnp.clip(s2, 0, e_loc - 1),
+                    jnp.clip(rank2_c, 0, c3 - 1)]
+    gathered = jnp.where(valid2[:, None], gathered, 0)
+    rows_out = jnp.zeros_like(rows).at[order2].set(gathered)
+
+    back = jax.lax.all_to_all(rows_out.reshape(m_shards, c2, d), axis,
+                              split_axis=0, concat_axis=0, tiled=True)
+
+    valid = rank < c2
+    vals = back[sdst, jnp.clip(rank_c, 0, c2 - 1)]
+    vals = jnp.where(valid[:, None], vals, 0) * sw[:, None]
+    out = jnp.zeros((t, d), x_loc.dtype).at[stok].add(vals)
+    return out
+
+
+def moe_block_ep(params: Params, x: jax.Array, cfg: ModelConfig
+                 ) -> Optional[jax.Array]:
+    """EP a2a MoE. Returns None when no suitable mesh is active (caller
+    falls back to the GSPMD formulation)."""
+    mesh = sh.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    m_shards = mesh.shape["model"]
+    b, s, d = x.shape
+    if cfg.moe_experts % m_shards or s % m_shards:
+        return None
+
+    bspec = sh.logical_spec("batch")
+    batch_entry = bspec[0] if len(bspec) else None
+    x_spec = P(batch_entry, "model", None)      # seq sharded over model
+    w_spec = P("model", None, None)
+    has_w3 = "w3" in params
+
+    if has_w3:
+        def fn(x_l, router, w1, w2, w3):
+            t_loc = x_l.shape[0] * x_l.shape[1]
+            out = _local_moe(x_l.reshape(t_loc, d), router, w1, w2, w3,
+                             cfg=cfg, m_shards=m_shards, axis="model")
+            return out.reshape(x_l.shape)
+        out = jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
+            out_specs=x_spec, check_vma=False,
+        )(x, params["router"].astype(x.dtype), params["w1"], params["w2"],
+          params["w3"])
+    else:
+        def fn(x_l, router, w1, w2):
+            t_loc = x_l.shape[0] * x_l.shape[1]
+            out = _local_moe(x_l.reshape(t_loc, d), router, w1, w2, None,
+                             cfg=cfg, m_shards=m_shards, axis="model")
+            return out.reshape(x_l.shape)
+        out = jax.shard_map(
+            fn, mesh=mesh,
+            in_specs=(x_spec, P(None, None), w_spec, w_spec),
+            out_specs=x_spec, check_vma=False,
+        )(x, params["router"].astype(x.dtype), params["w1"], params["w2"])
+
+    if cfg.moe_shared_experts:
+        act = _act(cfg.act)
+        hs = act(x @ params["sw1"])
+        if "sw3" in params:
+            hs = hs * (x @ params["sw3"])
+        out = out + hs @ params["sw2"]
+    return sh.shard(out, "batch", "seq", "act_embed")

@@ -1,0 +1,329 @@
+"""State-space sequence mixers: Mamba-1 (S6 selective scan) and Mamba-2
+(SSD chunked matmul form), in pure JAX.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel is replaced
+by a seq-chunked formulation — ``lax.scan`` over chunks carrying the SSM
+state, with an associative scan (Mamba-1) or the SSD matmul form
+(Mamba-2) inside each chunk, so the materialized working set stays
+VMEM/HBM-friendly and the intra-chunk math lands on the MXU.
+``repro.kernels.ssm_scan`` provides the Pallas kernel for the hot loop;
+these jnp paths are its oracle and the dry-run lowering.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import shard
+from .layers import _make, dt as _dt
+
+Params = Dict[str, Any]
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def mamba_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, (cfg.d_model + 15) // 16)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def mamba_params(cfg: ModelConfig, rng=None, abstract=False) -> Params:
+    d, din, st = cfg.d_model, d_inner(cfg), cfg.ssm_state
+    if cfg.mamba_version == 1:
+        r = dt_rank(cfg)
+        shapes = {
+            "in_proj": (d, 2 * din),
+            "conv_w": (cfg.ssm_conv, din),
+            "conv_b": (din,),
+            "x_proj": (din, r + 2 * st),
+            "dt_proj": (r, din),
+            "dt_bias": (din,),
+            "A_log": (din, st),
+            "D": (din,),
+            "out_proj": (din, d),
+        }
+    else:
+        h = mamba_heads(cfg)
+        conv_dim = din + 2 * st
+        shapes = {
+            "in_proj": (d, 2 * din + 2 * st + h),   # z, x, B, C, dt
+            "conv_w": (cfg.ssm_conv, conv_dim),
+            "conv_b": (conv_dim,),
+            "dt_bias": (h,),
+            "A_log": (h,),
+            "D": (h,),
+            "norm_w": (din,),
+            "out_proj": (din, d),
+        }
+    p = _make(shapes, cfg, rng, abstract, fan_in=d)
+    if not abstract and rng is not None:
+        # S4-style dt/A init keeps the scan stable at init time
+        if cfg.mamba_version == 1:
+            a = jnp.broadcast_to(jnp.arange(1, st + 1, dtype=jnp.float32),
+                                 (din, st))
+            p["A_log"] = jnp.log(a).astype(_dt(cfg))
+        else:
+            p["A_log"] = jnp.zeros((mamba_heads(cfg),), _dt(cfg))
+            p["norm_w"] = jnp.ones((din,), _dt(cfg))
+        p["dt_bias"] = jnp.full(p["dt_bias"].shape,
+                                math.log(math.expm1(0.01)), _dt(cfg))
+        p["D"] = jnp.ones(p["D"].shape, _dt(cfg))
+    return p
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
+    if cfg.mamba_version == 1:
+        return {"in_proj": ("embed", "ff"), "conv_w": (None, "ff"),
+                "conv_b": ("ff",), "x_proj": ("ff", None),
+                "dt_proj": (None, "ff"), "dt_bias": ("ff",),
+                "A_log": ("ff", None), "D": ("ff",),
+                "out_proj": ("ff", "embed")}
+    return {"in_proj": ("embed", "ff"), "conv_w": (None, "ff"),
+            "conv_b": ("ff",), "dt_bias": ("heads",), "A_log": ("heads",),
+            "D": ("heads",), "norm_w": ("ff",), "out_proj": ("ff", "embed")}
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """x: (B,S,C); w: (K,C). Returns (out, new_state)."""
+    k = w.shape[0]
+    if state is not None:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(k - 1):, :]
+    else:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_state = None
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1: S6 selective scan (chunked associative scan)
+# ---------------------------------------------------------------------------
+
+def mamba1_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                   state: Optional[Dict[str, jax.Array]] = None
+                   ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B,S,d). state (decode): {"h": (B,din,st), "conv": (B,K-1,din)}."""
+    b, s, d = x.shape
+    din, st = d_inner(cfg), cfg.ssm_state
+    xz = x @ params["in_proj"]
+    xs, z = xz[..., :din], xz[..., din:]
+    xs = shard(xs, "batch", "seq", "ff")
+
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(xs, params["conv_w"], params["conv_b"],
+                                conv_state)
+
+    proj = xs @ params["x_proj"]                           # (B,S,r+2st)
+    r = dt_rank(cfg)
+    dt_raw, Bc, Cc = proj[..., :r], proj[..., r:r + st], proj[..., r + st:]
+    dt_v = jax.nn.softplus(dt_raw @ params["dt_proj"]
+                           + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (din, st)
+
+    if state is not None and s == 1:                        # decode step
+        h0 = state["h"]
+        da = jnp.exp(dt_v[:, 0, :, None] * A[None])         # (B,din,st)
+        dbx = (dt_v[:, 0, :, None] * Bc[:, 0, None, :]
+               * xs[:, 0, :, None].astype(jnp.float32))
+        h = da * h0 + dbx
+        y = jnp.einsum("bds,bs->bd", h, Cc[:, 0].astype(jnp.float32))
+        y = y + params["D"].astype(jnp.float32) * xs[:, 0].astype(jnp.float32)
+        y = (y[:, None, :]).astype(x.dtype)
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_last = _scan_chunks_m1(xs, dt_v, Bc, Cc, A, params["D"], cfg, h0)
+        new_state = ({"h": h_last, "conv": new_conv}
+                     if state is not None else None)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    return shard(out, "batch", "seq", "act_embed"), new_state
+
+
+def _scan_chunks_m1(xs, dt_v, Bc, Cc, A, D, cfg: ModelConfig,
+                    h0: Optional[jax.Array] = None):
+    b, s, din = xs.shape
+    st = A.shape[1]
+    c = min(cfg.ssm_chunk, s)
+    n = s // c
+    # (n, B, c, ...) chunked
+    def chop(t):
+        return t[:, :n * c].reshape(b, n, c, *t.shape[2:]).swapaxes(0, 1)
+
+    xs_c, dt_c, B_c, C_c = map(chop, (xs, dt_v, Bc, Cc))
+
+    scan_dt = jnp.dtype(cfg.ssm_scan_dtype)
+
+    def chunk_step(h, inp):
+        xck, dtk, Bk, Ck = inp
+        da = jnp.exp(dtk[..., None] * A[None, None])         # (B,c,din,st)
+        dbx = (dtk[..., None] * Bk[:, :, None, :]
+               * xck[..., None].astype(jnp.float32))
+        # associative scan within the chunk: h_t = da_t h_{t-1} + dbx_t
+        # (elements materialized in cfg.ssm_scan_dtype; carry stays f32)
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+        a_s, b_s = jax.lax.associative_scan(
+            op, (da.astype(scan_dt), dbx.astype(scan_dt)), axis=1)
+        # stay in scan_dt end-to-end: converting the (B,c,d,N) tree output
+        # to f32 would re-materialize the full slab (measured, §Perf-A)
+        hs = a_s * h[:, None].astype(scan_dt) + b_s          # (B,c,din,st)
+        y = jnp.einsum("bcds,bcs->bcd", hs, Ck.astype(scan_dt),
+                       preferred_element_type=jnp.float32)
+        return hs[:, -1].astype(jnp.float32), y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, din, st), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_step, h0, (xs_c, dt_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(b, n * c, din)
+    y = y + D.astype(jnp.float32)[None, None, :] * xs.astype(jnp.float32)
+    return y.astype(xs.dtype), h_last
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2: SSD (chunked matmul form)
+# ---------------------------------------------------------------------------
+
+def mamba2_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                   state: Optional[Dict[str, jax.Array]] = None
+                   ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B,S,d). state: {"h": (B,H,P,st), "conv": (B,K-1,din+2st)}."""
+    b, s, d = x.shape
+    din, st = d_inner(cfg), cfg.ssm_state
+    h_n, p_d = mamba_heads(cfg), cfg.ssm_head_dim
+
+    proj = x @ params["in_proj"]
+    z = proj[..., :din]
+    xBC = proj[..., din:2 * din + 2 * st]
+    dt_raw = proj[..., 2 * din + 2 * st:]
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xs = shard(xBC[..., :din], "batch", "seq", "ff")
+    Bc, Cc = xBC[..., din:din + st], xBC[..., din + st:]
+    dt_v = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                           + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                 # (H,)
+    xh = xs.reshape(b, s, h_n, p_d)
+
+    if state is not None and s == 1:
+        h0 = state["h"]                                     # (B,H,P,st)
+        da = jnp.exp(dt_v[:, 0] * A[None])                  # (B,H)
+        dbx = jnp.einsum("bhp,bs->bhps",
+                         (dt_v[:, 0, :, None] * xh[:, 0].astype(jnp.float32)),
+                         Bc[:, 0].astype(jnp.float32))
+        h = da[..., None, None] * h0 + dbx
+        y = jnp.einsum("bhps,bs->bhp", h, Cc[:, 0].astype(jnp.float32))
+        y = y + params["D"].astype(jnp.float32)[None, :, None] \
+            * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, din).astype(x.dtype)
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        h0 = state["h"] if state is not None else None
+        y, h_last = _ssd_chunks(xh, dt_v, Bc, Cc, A, params["D"], cfg, h0)
+        new_state = ({"h": h_last, "conv": new_conv}
+                     if state is not None else None)
+    y = _gated_rmsnorm(y, jax.nn.silu(z), params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return shard(out, "batch", "seq", "act_embed"), new_state
+
+
+def _gated_rmsnorm(y, gate, w, eps):
+    orig = y.dtype
+    y = y.astype(jnp.float32) * gate.astype(jnp.float32)
+    y = y * jax.lax.rsqrt(jnp.mean(y * y, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(orig)
+
+
+def _segsum(logd: jax.Array) -> jax.Array:
+    """log decay(i<-j) = sum_{t=j+1..i} logd_t, lower-triangular."""
+    c = logd.shape[-1]
+    cs = jnp.cumsum(logd, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]              # (.., i, j)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunks(xh, dt_v, Bc, Cc, A, D, cfg: ModelConfig,
+                h0: Optional[jax.Array] = None):
+    b, s, h_n, p_d = xh.shape
+    st = Bc.shape[-1]
+    c = min(cfg.ssm_chunk, s)
+    n = s // c
+
+    def chop(t):
+        return t[:, :n * c].reshape(b, n, c, *t.shape[2:]).swapaxes(0, 1)
+
+    x_c = chop(xh.astype(jnp.float32))                      # (n,B,c,H,P)
+    dt_c = chop(dt_v)                                       # (n,B,c,H)
+    B_cc = chop(Bc.astype(jnp.float32))                     # (n,B,c,st)
+    C_cc = chop(Cc.astype(jnp.float32))
+
+    def chunk_step(hprev, inp):
+        xk, dtk, Bk, Ck = inp
+        logd = dtk * A[None, None, :]                       # (B,c,H)
+        logd_t = jnp.swapaxes(logd, 1, 2)                   # (B,H,c)
+        seg = _segsum(logd_t)                               # (B,H,c,c)
+        # intra-chunk (attention-like, MXU):
+        cb = jnp.einsum("bis,bjs->bij", Ck, Bk)             # (B,c,c)
+        scores = cb[:, None] * jnp.exp(seg)                 # (B,H,c,c)
+        xdt = xk * dtk[..., None]                           # (B,c,H,P)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", scores, xdt)
+        # inter-chunk: contribution of carried state
+        dcum = jnp.cumsum(logd_t, axis=-1)                  # (B,H,c)
+        y_inter = jnp.einsum("bihs,bhps->bihp",
+                             Ck[:, :, None, :] * jnp.exp(dcum)[..., None]
+                             .swapaxes(1, 2),
+                             hprev)
+        # new carried state
+        dlast = dcum[..., -1:]                              # (B,H,1)
+        w_state = jnp.exp(dlast - dcum)                     # decay j->end
+        hk = jnp.einsum("bjhp,bjs->bhps",
+                        xdt * jnp.swapaxes(w_state, 1, 2)[..., None], Bk)
+        h_new = hprev * jnp.exp(dlast)[..., None] + hk
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h_n, p_d, st), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_step, h0, (x_c, dt_c, B_cc, C_cc))
+    y = ys.swapaxes(0, 1).reshape(b, n * c, h_n, p_d)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    return y.reshape(b, n * c, h_n * p_d).astype(xh.dtype), h_last
+
+
+def mamba_forward(params: Params, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[Dict[str, jax.Array]] = None):
+    if cfg.mamba_version == 1:
+        return mamba1_forward(params, x, cfg, state)
+    return mamba2_forward(params, x, cfg, state)
+
+
+def mamba_state_shapes(cfg: ModelConfig, batch: int) -> Dict[str, Tuple]:
+    din, st, k = d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+    if cfg.mamba_version == 1:
+        return {"h": (batch, din, st), "conv": (batch, k - 1, din)}
+    return {"h": (batch, mamba_heads(cfg), cfg.ssm_head_dim, st),
+            "conv": (batch, k - 1, din + 2 * st)}

@@ -1,0 +1,216 @@
+"""Decoder-only transformer (dense / MoE / MLA) with scan-over-layers.
+
+Layer weights are stacked on a leading ``layers`` axis and consumed by
+``jax.lax.scan`` — one compiled layer body regardless of depth, which
+keeps dry-run HLO size and compile time flat across the 94-layer configs.
+Activation rematerialization is configurable (cfg.remat in
+{none, dots, full}).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding.specs import shard
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _layer_params(cfg: ModelConfig, rng, abstract: bool) -> Params:
+    p: Params = {"ln1": _norm(cfg, abstract), "ln2": _norm(cfg, abstract)}
+    r1, r2 = (jax.random.split(rng) if rng is not None else (None, None))
+    if cfg.mla_kv_lora:
+        p["attn"] = L.mla_params(cfg, r1, abstract)
+    else:
+        p["attn"] = L.attention_params(cfg, r1, abstract)
+    if cfg.moe_experts:
+        p["moe"] = L.moe_params(cfg, r2, abstract)
+    else:
+        p["mlp"] = L.mlp_params(cfg, cfg.d_ff, r2, abstract)
+    return p
+
+
+def _norm(cfg: ModelConfig, abstract: bool):
+    if abstract:
+        return jax.ShapeDtypeStruct((cfg.d_model,), L.dt(cfg))
+    return jnp.ones((cfg.d_model,), L.dt(cfg))
+
+
+def _stack(cfg: ModelConfig, rng, abstract: bool, n_layers: int) -> Params:
+    if abstract:
+        one = _layer_params(cfg, None, True)
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_layers,) + s.shape, s.dtype), one)
+    rngs = jax.random.split(rng, n_layers)
+    return jax.vmap(lambda r: _layer_params(cfg, r, False))(rngs)
+
+
+def init_params(cfg: ModelConfig, rng=None, abstract: bool = False) -> Params:
+    r_emb, r_layers = (jax.random.split(rng) if rng is not None else (None, None))
+    return {
+        "embed": L.embed_params(cfg, r_emb, abstract),
+        "layers": _stack(cfg, r_layers, abstract, cfg.num_layers),
+        "ln_f": _norm(cfg, abstract),
+    }
+
+
+def param_pspecs(cfg: ModelConfig) -> Params:
+    """Pytree of logical-axis tuples matching init_params' structure."""
+    layer = {"ln1": (None,), "ln2": (None,)}
+    layer["attn"] = (L.mla_specs(cfg) if cfg.mla_kv_lora
+                     else L.attention_specs(cfg))
+    if cfg.moe_experts:
+        layer["moe"] = L.moe_specs(cfg)
+    else:
+        layer["mlp"] = L.mlp_specs(cfg)
+    stacked = jax.tree.map(lambda sp: ("layers",) + tuple(sp), layer,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return {"embed": L.embed_specs(cfg), "layers": stacked, "ln_f": (None,)}
+
+
+# ---------------------------------------------------------------------------
+# Layer body
+# ---------------------------------------------------------------------------
+
+def _layer_body(cfg: ModelConfig, lp: Params, x: jax.Array, *,
+                positions: jax.Array, impl: str,
+                cache: Optional[Tuple] = None,
+                cache_index=None) -> Tuple[jax.Array, Optional[Tuple]]:
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla_kv_lora:
+        a, new_cache = L.mla_attention(lp["attn"], h, cfg, positions=positions,
+                                       cache=cache, cache_index=cache_index,
+                                       impl=impl)
+    else:
+        a, new_cache = L.attention(lp["attn"], h, cfg, positions=positions,
+                                   causal=True, cache=cache,
+                                   cache_index=cache_index, impl=impl)
+    x = x + a
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe_experts:
+        m = None
+        if cfg.moe_impl == "ep":
+            from .moe_ep import moe_block_ep
+            m = moe_block_ep(lp["moe"], h, cfg)
+        if m is None:
+            m = L.moe_block(lp["moe"], h, cfg)
+    else:
+        m = L.mlp(lp["mlp"], h, cfg)
+    return x + m, new_cache
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def backbone(params: Params, x: jax.Array, cfg: ModelConfig, *,
+             positions: jax.Array, impl: str = "full") -> jax.Array:
+    """Embedded input -> final hidden states (no caches)."""
+
+    def body(carry, lp):
+        out, _ = _layer_body(cfg, lp, carry, positions=positions, impl=impl)
+        return out, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["layers"])
+    return L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def train_loss(params: Params, batch: Dict[str, jax.Array],
+               cfg: ModelConfig, *, impl: str = "full") -> jax.Array:
+    tokens, labels = batch["tokens"], batch["labels"]
+    x = L.embed(params["embed"], tokens, cfg)
+    if "image_embeds" in batch:                     # VLM: stub ViT output
+        img = batch["image_embeds"].astype(x.dtype)
+        x = jnp.concatenate([img, x], axis=1)
+        pad = jnp.zeros(img.shape[:2], labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+        mask_img = img.shape[1]
+    else:
+        mask_img = 0
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    h = backbone(params, x, cfg, positions=positions, impl=impl)
+    if mask_img:
+        h, labels = h[:, mask_img:], labels[:, mask_img:]
+    return L.chunked_ce_loss(params["embed"], h, labels, cfg)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    lcount, hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    dtype = L.dt(cfg)
+    if cfg.mla_kv_lora:
+        return {
+            "c": jax.ShapeDtypeStruct(
+                (lcount, batch, max_len, cfg.mla_kv_lora), dtype),
+            "r": jax.ShapeDtypeStruct(
+                (lcount, batch, max_len, cfg.mla_qk_rope_dim), dtype),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((lcount, batch, max_len, hkv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((lcount, batch, max_len, hkv, hd), dtype),
+    }
+
+
+def cache_pspecs(cfg: ModelConfig) -> Dict[str, Tuple]:
+    if cfg.mla_kv_lora:
+        return {"c": ("layers", "batch", "kv_seq", None),
+                "r": ("layers", "batch", "kv_seq", None)}
+    return {"k": ("layers", "batch", "kv_seq", "kv_heads", None),
+            "v": ("layers", "batch", "kv_seq", "kv_heads", None)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_shapes(cfg, batch, max_len))
+
+
+def _cache_tuple(cfg, cache_l):
+    return (cache_l["c"], cache_l["r"]) if cfg.mla_kv_lora \
+        else (cache_l["k"], cache_l["v"])
+
+
+def _cache_dict(cfg, tup):
+    return ({"c": tup[0], "r": tup[1]} if cfg.mla_kv_lora
+            else {"k": tup[0], "v": tup[1]})
+
+
+def forward_with_cache(params: Params, tokens: jax.Array, cache: Dict,
+                       cfg: ModelConfig, cache_index, *,
+                       impl: str = "full",
+                       image_embeds: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, Dict]:
+    """Prefill (S>1) or decode (S==1): returns (last-position logits, cache)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    if image_embeds is not None:
+        x = jnp.concatenate([image_embeds.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    positions = cache_index + jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+
+    def body(carry, xs):
+        lp, cl = xs
+        out, new_cache = _layer_body(cfg, lp, carry, positions=positions,
+                                     impl=impl, cache=_cache_tuple(cfg, cl),
+                                     cache_index=cache_index)
+        return out, _cache_dict(cfg, new_cache)
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache))
+    h = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = L.logits_fn(params["embed"], h, cfg)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,3 @@
+from . import adamw
+from .adamw import OptConfig
+__all__ = ["adamw", "OptConfig"]

@@ -1,0 +1,109 @@
+"""AdamW + global-norm clipping + warmup-cosine schedule (pure JAX pytrees).
+
+Moment dtype follows ModelConfig.opt_dtype: fp32 by default, bf16 for the
+200B+ configs where fp32 moments would not fit a single pod (standard
+large-scale practice; recorded in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    end_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.peak_lr * (cfg.end_lr_frac + (1 - cfg.end_lr_frac)
+                         * 0.5 * (1.0 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_state(params: Params, cfg: OptConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def zeros_like(p):
+        if isinstance(p, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct(p.shape, mdt)
+        return jnp.zeros(p.shape, mdt)
+
+    return {
+        "m": jax.tree.map(zeros_like, params),
+        "v": jax.tree.map(zeros_like, params),
+        "step": (jax.ShapeDtypeStruct((), jnp.int32)
+                 if isinstance(jax.tree.leaves(params)[0],
+                               jax.ShapeDtypeStruct)
+                 else jnp.zeros((), jnp.int32)),
+    }
+
+
+def state_pspecs(param_pspecs: Params) -> Dict[str, Any]:
+    is_leaf = lambda x: isinstance(x, tuple)
+    return {
+        "m": jax.tree.map(lambda s: s, param_pspecs, is_leaf=is_leaf),
+        "v": jax.tree.map(lambda s: s, param_pspecs, is_leaf=is_leaf),
+        "step": (),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(params: Params, grads: Params, state: Dict[str, Any],
+                  cfg: OptConfig) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:   # no weight decay on norms/biases
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(mdt), v32.astype(mdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    outs = [upd(p, g, m, v) for p, g, m, v in
+            zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in outs])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

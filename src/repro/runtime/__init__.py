@@ -1,0 +1,7 @@
+from .elastic import ElasticController, MeshPlan
+from .failover import FailoverConfig, FailoverManager
+from .membership import Membership, NodeInfo
+from .placement import Placement
+
+__all__ = ["ElasticController", "MeshPlan", "FailoverConfig",
+           "FailoverManager", "Membership", "NodeInfo", "Placement"]

@@ -1,0 +1,63 @@
+"""Checkpoint/restart orchestration bound to membership generations.
+
+The trainer tags every checkpoint with the mesh generation that produced
+it; on a membership event the ElasticController bumps the generation and
+the trainer (a) drains in-flight steps, (b) restores the latest complete
+checkpoint re-sharded to the new mesh, (c) resumes.  Restore-to-any-mesh
+comes from repro.ckpt (host-side arrays + device_put with the new
+shardings).
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+from repro import ckpt as ckpt_lib
+from .elastic import ElasticController
+
+
+@dataclass
+class FailoverConfig:
+    ckpt_dir: str
+    save_every_steps: int = 100
+    keep_last: int = 3
+
+
+class FailoverManager:
+    def __init__(self, cfg: FailoverConfig, controller: ElasticController):
+        self.cfg = cfg
+        self.controller = controller
+        self._seen_generation = controller.generation
+        os.makedirs(cfg.ckpt_dir, exist_ok=True)
+
+    # -- checkpoint cadence -----------------------------------------------------
+    def maybe_save(self, step: int, state: Any) -> Optional[str]:
+        if step % self.cfg.save_every_steps:
+            return None
+        path = ckpt_lib.save(self.cfg.ckpt_dir, step, state)
+        self._gc()
+        return path
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_", 1)[1]) for d in os.listdir(self.cfg.ckpt_dir)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.cfg.keep_last]:
+            import shutil
+            shutil.rmtree(os.path.join(self.cfg.ckpt_dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restart path ----------------------------------------------------------------
+    def needs_restore(self) -> bool:
+        return self.controller.generation != self._seen_generation
+
+    def restore_latest(self, target_state: Any, shardings: Any = None
+                       ) -> tuple[int, Any]:
+        step = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            raise FileNotFoundError("no checkpoint to restore")
+        state = ckpt_lib.restore(self.cfg.ckpt_dir, step, target_state,
+                                 shardings)
+        self._seen_generation = self.controller.generation
+        return step, state

@@ -1,0 +1,116 @@
+"""Cluster membership on the D1HT ring (the paper's technique as the ML
+control plane).
+
+Each training/serving host is a D1HT peer; membership events (node joins,
+failures, preemptions) disseminate via EDRA with the paper's Theta tuning,
+so every host can make placement decisions from its OWN full routing
+table with bounded staleness (< f of lookups see a stale view) and zero
+central directory — the property the paper proves scales past directory
+servers (§VII-D).
+
+Quarantine (paper §V) doubles as the spot/preemptible admission policy:
+a node gets no shards, DP rank, or expert replicas until it has survived
+T_q — exactly the paper's defense against volatile peers, repurposed.
+
+This module is deterministic and host-local (events are injected by the
+surrounding orchestration or by the DES in tests); the asyncio/UDP D1HT
+node in repro.dht drives it live in examples/dht_cluster.py.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.edra import Event
+from repro.core.quarantine import QuarantineManager
+from repro.core.ring import RoutingTable, peer_id
+from repro.core.tuning import EdraParams
+
+
+@dataclass
+class NodeInfo:
+    node_id: int
+    addr: Tuple[str, int]
+    joined_at: float
+    capabilities: Dict[str, float] = field(default_factory=dict)
+
+
+class Membership:
+    """Full-routing-table membership view with quarantine admission."""
+
+    def __init__(self, *, s_avg: float = 3600.0, f: float = 0.01,
+                 t_q: float = 600.0, now: Callable[[], float] = time.monotonic):
+        self.now = now
+        self.table = RoutingTable([])
+        self.nodes: Dict[int, NodeInfo] = {}
+        self.quarantine = QuarantineManager(t_q=t_q)
+        self.params = EdraParams.derive(2, s_avg, f)
+        self._listeners: List[Callable[[Event], None]] = []
+        self._events_seen = 0
+
+    # -- event intake (from the D1HT peer / DES / orchestrator) -------------
+    def on_event(self, ev: Event) -> None:
+        self._events_seen += 1
+        if ev.kind == "join":
+            self.table.add(ev.subject_id)
+            self.nodes.setdefault(
+                ev.subject_id,
+                NodeInfo(ev.subject_id, ev.addr, self.now()))
+        else:
+            self.table.remove(ev.subject_id)
+            self.nodes.pop(ev.subject_id, None)
+        self._retune()
+        for fn in self._listeners:
+            fn(ev)
+
+    def subscribe(self, fn: Callable[[Event], None]) -> None:
+        self._listeners.append(fn)
+
+    def _retune(self) -> None:
+        """§IV-D self-organization: re-derive Theta from the locally
+        observed event rate — no coordination required."""
+        n = max(len(self.table), 2)
+        window = max(self.now(), 1.0)
+        r = self._events_seen / window
+        if r > 0:
+            self.params = self.params.retune(n, r)
+
+    # -- joins with quarantine ------------------------------------------------
+    def request_join(self, host: str, port: int,
+                     preemptible: bool = False) -> int:
+        nid = peer_id(host, port)
+        if preemptible:
+            gateways = list(self.table.ids[:2])
+            self.quarantine.enqueue(nid, (host, port), self.now(), gateways)
+        else:
+            self.admit(nid, (host, port))
+        return nid
+
+    def admit(self, nid: int, addr: Tuple[str, int]) -> None:
+        self.on_event(Event(subject_id=nid, kind="join", addr=addr,
+                            seq=self._events_seen + 1))
+
+    def poll_quarantine(self) -> List[int]:
+        admitted = []
+        for entry in self.quarantine.due(self.now()):
+            self.admit(entry.peer_id, entry.addr)
+            admitted.append(entry.peer_id)
+        return admitted
+
+    def fail(self, nid: int) -> None:
+        """Rule-5 style failure: detected by heartbeat silence."""
+        self.quarantine.withdraw(nid)
+        if nid in self.table:
+            self.on_event(Event(subject_id=nid, kind="leave",
+                                seq=self._events_seen + 1))
+
+    # -- views ---------------------------------------------------------------------
+    def size(self) -> int:
+        return len(self.table)
+
+    def members(self) -> List[int]:
+        return list(self.table.ids)
+
+    def owner_of(self, key: bytes | str) -> int:
+        return self.table.owner(key)

@@ -1,0 +1,76 @@
+"""Consistent-hash placement of work onto ring members (paper §III).
+
+Everything that must be owned by exactly one node — KV-cache sessions,
+MoE expert replicas, data-pipeline file shards, checkpoint shards — is a
+*key* on the D1HT ring; its owner is the key's successor, resolved with a
+single local lookup against the full routing table (the paper's whole
+point: one hop, no directory).  The Pallas ``ring_lookup`` kernel batches
+these lookups on-device for the serving router.
+
+Churn behavior inherits consistent hashing's guarantee: a membership
+event remaps only the keys in the arc adjacent to the event (~K/n keys),
+so elastic re-meshing moves the minimum state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.ring import RoutingTable, hash_id
+
+
+@dataclass
+class Placement:
+    table: RoutingTable
+
+    # -- generic key ownership ------------------------------------------------
+    def owner(self, key: str) -> int:
+        return self.table.owner(key)
+
+    def owners(self, keys: Sequence[str]) -> List[int]:
+        return [self.table.owner(k) for k in keys]
+
+    # -- MoE experts ---------------------------------------------------------------
+    def expert_assignment(self, num_experts: int, model_shards: int,
+                          salt: str = "") -> np.ndarray:
+        """Permutation mapping expert e -> EP shard, derived from the ring.
+
+        Experts are placed on the ring by hash; each lands on its successor
+        member, and members are binned round-robin into the ``model_shards``
+        EP groups by ring order.  On membership change only the experts in
+        the affected arc migrate (elastic EP).  Returns perm (E,) with
+        perm[e] = shard index; applied as a gather on the stacked expert
+        weights before EP sharding.
+        """
+        members = self.table.ids
+        n = len(members)
+        if n == 0:
+            return np.arange(num_experts) % model_shards
+        shard_of_member = {m: i % model_shards for i, m in enumerate(members)}
+        out = np.empty((num_experts,), np.int64)
+        for e in range(num_experts):
+            m = self.table.successor_of(hash_id(f"expert/{salt}/{e}"))
+            out[e] = shard_of_member[m]
+        return out
+
+    def expert_permutation(self, num_experts: int, model_shards: int,
+                           salt: str = "") -> np.ndarray:
+        """Stable permutation grouping experts by their assigned shard
+        (experts_per_shard contiguity for the EP weight layout)."""
+        assign = self.expert_assignment(num_experts, model_shards, salt)
+        return np.argsort(assign, kind="stable")
+
+    # -- serving sessions ---------------------------------------------------------
+    def session_owner(self, session_id: str) -> int:
+        return self.owner(f"session/{session_id}")
+
+    def balance_stats(self, num_keys: int = 4096) -> Dict[str, float]:
+        counts: Dict[int, int] = {}
+        for i in range(num_keys):
+            o = self.owner(f"probe/{i}")
+            counts[o] = counts.get(o, 0) + 1
+        vals = np.array(list(counts.values()), np.float64)
+        return {"mean": float(vals.mean()), "max": float(vals.max()),
+                "cv": float(vals.std() / max(vals.mean(), 1e-9))}

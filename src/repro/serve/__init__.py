@@ -1,0 +1,3 @@
+from .server import Replica, Request, SessionRouter
+
+__all__ = ["Replica", "Request", "SessionRouter"]

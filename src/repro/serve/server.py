@@ -1,0 +1,114 @@
+"""Batched serving with D1HT session routing.
+
+Requests carry a session id; the D1HT ring (full routing table, single
+local lookup) decides which serving replica owns the session's KV cache.
+The Pallas ``ring_lookup`` kernel resolves whole request batches
+on-device.  Each replica runs continuous batched decode over its slots.
+
+Quarantined replicas (spot nodes inside T_q) take no sessions but may
+proxy requests — the paper's gateway mechanism (§V).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ring import RoutingTable, hash_id
+from repro.kernels.ring_lookup.ops import ring_lookup
+from repro.models import Model
+from repro.runtime import Membership, Placement
+
+
+@dataclass
+class Request:
+    session_id: str
+    prompt: np.ndarray           # (S,) int32
+    max_new_tokens: int = 16
+
+
+class SessionRouter:
+    """Batched session -> replica resolution over the ring."""
+
+    def __init__(self, membership: Membership):
+        self.membership = membership
+
+    def route(self, session_ids: List[str]) -> List[int]:
+        table = np.asarray(
+            [i >> 32 for i in self.membership.members()], np.uint32)
+        table = np.sort(table)
+        keys = np.asarray(
+            [hash_id(f"session/{s}") >> 32 for s in session_ids], np.uint32)
+        idx = np.asarray(ring_lookup(jnp.asarray(keys), jnp.asarray(table)))
+        members_sorted = sorted(self.membership.members(),
+                                key=lambda m: m >> 32)
+        return [members_sorted[i] for i in idx]
+
+
+class Replica:
+    """One serving replica: slab of decode slots + jitted prefill/decode."""
+
+    def __init__(self, model: Model, *, slots: int, max_len: int):
+        self.model = model
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = model.init_cache(slots, max_len)
+        self.lengths = np.zeros((slots,), np.int32)
+        self.sessions: Dict[str, int] = {}
+        self.tokens = np.zeros((slots, 1), np.int32)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    def _slot_for(self, session_id: str) -> int:
+        if session_id in self.sessions:
+            return self.sessions[session_id]
+        free = [i for i in range(self.slots)
+                if i not in self.sessions.values()]
+        if not free:
+            raise RuntimeError("replica full")
+        self.sessions[session_id] = free[0]
+        return free[0]
+
+    def attach_params(self, params) -> None:
+        self.params = params
+
+    def admit(self, req: Request) -> int:
+        """Prefill a prompt into the session's slot (single-sequence batch
+        into a fresh slot-shaped cache, then written back slot-granular)."""
+        slot = self._slot_for(req.session_id)
+        s = len(req.prompt)
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        one = self.model.init_cache(1, self.max_len)
+        logits, one = self._prefill(self.params, batch, one)
+        self._write_slot(one, slot)
+        self.lengths[slot] = s
+        tok = int(jnp.argmax(logits[0]))
+        self.tokens[slot, 0] = tok
+        return tok
+
+    def _write_slot(self, one_cache, slot: int) -> None:
+        def wr(dst, src):
+            return dst.at[:, slot:slot + 1].set(src) if dst.ndim >= 2 else dst
+        self.cache = jax.tree.map(wr, self.cache, one_cache)
+
+    def decode_round(self) -> Dict[str, int]:
+        """One synchronized decode step for all active sessions."""
+        if not self.sessions:
+            return {}
+        idx = int(self.lengths.max())
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(idx, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        out = {}
+        for sid, slot in self.sessions.items():
+            self.tokens[slot, 0] = nxt[slot]
+            self.lengths[slot] += 1
+            out[sid] = int(nxt[slot])
+        return out
+
+    def evict(self, session_id: str) -> None:
+        self.sessions.pop(session_id, None)

@@ -1,0 +1,5 @@
+from .specs import (logical_spec, mesh_context, named_sharding, set_mesh,
+                    shard, update_rules)
+
+__all__ = ["logical_spec", "mesh_context", "named_sharding", "set_mesh",
+           "shard", "update_rules"]

@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules (GSPMD PartitionSpec rule engine).
+
+Model code annotates tensors with *logical* axes ("batch", "heads", ...);
+the launcher installs a rule set mapping logical axes to mesh axes for the
+active mesh (single-pod ("data","model") or multi-pod ("pod","data",
+"model")).  Outside any mesh (CPU smoke tests) every constraint is a
+no-op, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Logical tensor axes used by the model code.
+#   batch    — global batch             -> data (and pod)
+#   seq      — sequence (for SP/long-context KV shards)
+#   heads    — attention heads / MoE experts / ff hidden  -> tensor axis
+#   embed    — d_model rows (FSDP-style weight shard)     -> data
+#   vocab    — vocabulary               -> tensor axis
+#   layers   — stacked-layer leading dim (never sharded)
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "experts": "model",
+    "moe_ff": None,
+    "moe_embed": "data",   # expert-weight d_model rows (FSDP default)
+    "embed": "data",        # weight d_model rows: FSDP-style over data
+    "act_embed": "model",   # activation d_model: TP-sharded residual stream
+    "vocab": "model",
+    "layers": None,
+    "state": None,
+}
+
+
+class _State(threading.local):
+    def __init__(self) -> None:
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, MeshAxes] = dict(DEFAULT_RULES)
+
+
+_STATE = _State()
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None) -> None:
+    _STATE.mesh = mesh
+    base = dict(DEFAULT_RULES)
+    if rules:
+        base.update(rules)
+    if mesh is not None:
+        # drop mesh axes the current mesh does not have (e.g. "pod")
+        names = set(mesh.axis_names)
+
+        def filt(v: MeshAxes) -> MeshAxes:
+            if v is None:
+                return None
+            if isinstance(v, str):
+                return v if v in names else None
+            kept = tuple(a for a in v if a in names)
+            return kept if kept else None
+
+        base = {k: filt(v) for k, v in base.items()}
+    _STATE.rules = base
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None):
+    prev_mesh, prev_rules = _STATE.mesh, dict(_STATE.rules)
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev_mesh, prev_rules
+
+
+def update_rules(**kw: MeshAxes) -> None:
+    _STATE.rules.update(kw)
+
+
+def logical_spec(*axes: Optional[str]) -> P:
+    """PartitionSpec for a tensor whose dims carry the given logical axes."""
+    rules = _STATE.rules
+    resolved = []
+    used: set = set()
+
+    def resolve(a: Optional[str]) -> MeshAxes:
+        if a is None:
+            return None
+        v = rules.get(a)
+        if v is None:
+            return None
+        vs = (v,) if isinstance(v, str) else tuple(v)
+        kept = tuple(x for x in vs if x not in used)
+        used.update(kept)
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else kept
+
+    for a in axes:
+        resolved.append(resolve(a))
+    return P(*resolved)
+
+
+def shard(x, *axes: Optional[str]):
+    """with_sharding_constraint on logical axes; identity without a mesh."""
+    mesh = _STATE.mesh
+    if mesh is None:
+        return x
+    spec = logical_spec(*axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*axes: Optional[str]) -> Optional[NamedSharding]:
+    mesh = _STATE.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_spec(*axes))

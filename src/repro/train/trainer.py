@@ -1,0 +1,83 @@
+"""Training loop with membership-driven fault tolerance.
+
+Wires together: data pipeline -> train_step -> AdamW, checkpoint cadence
+(FailoverManager), elastic re-mesh on membership events, straggler
+eviction via step-time heartbeats (Rule-5 generalized).  Used by
+examples/train_lm.py end-to-end and by the integration tests (which
+inject failures and assert recovery).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import jax
+import numpy as np
+
+from repro.models import Model
+from repro.optim import adamw
+from repro.runtime import (ElasticController, FailoverConfig,
+                           FailoverManager, Membership)
+from .step import TrainConfig, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 200
+    log_every: int = 10
+    train: TrainConfig = field(default_factory=TrainConfig)
+    failover: Optional[FailoverConfig] = None
+
+
+class Trainer:
+    def __init__(self, model: Model, cfg: TrainerConfig, *,
+                 membership: Optional[Membership] = None,
+                 model_axis: int = 1):
+        self.model = model
+        self.cfg = cfg
+        self.step_fn = jax.jit(make_train_step(model, cfg.train),
+                               donate_argnums=(0, 1))
+        self.membership = membership
+        self.controller = (ElasticController(membership,
+                                             model_axis=model_axis)
+                           if membership else None)
+        self.failover = (FailoverManager(cfg.failover, self.controller)
+                         if (cfg.failover and self.controller) else None)
+        self.history: List[Dict[str, float]] = []
+
+    def init_state(self, rng) -> tuple:
+        params = self.model.init(rng)
+        opt = adamw.init_state(params, self.cfg.train.opt)
+        return params, opt
+
+    def fit(self, state: tuple, data: Iterator[Dict[str, np.ndarray]],
+            start_step: int = 0) -> tuple:
+        params, opt = state
+        step = start_step
+        for batch in data:
+            if step >= self.cfg.steps:
+                break
+            t0 = time.perf_counter()
+            jbatch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            params, opt, metrics = self.step_fn(params, opt, jbatch)
+            dt = time.perf_counter() - t0
+            step += 1
+
+            if self.controller is not None:
+                self.controller.heartbeat(0, dt)
+            if self.failover is not None:
+                self.failover.maybe_save(step, {"params": params, "opt": opt})
+                if self.failover.needs_restore():
+                    step, restored = self.failover.restore_latest(
+                        {"params": params, "opt": opt})
+                    params, opt = restored["params"], restored["opt"]
+
+            if step % self.cfg.log_every == 0 or step == 1:
+                rec = {"step": step,
+                       "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "lr": float(metrics["lr"]),
+                       "step_time_s": dt}
+                self.history.append(rec)
+        return params, opt

@@ -1,0 +1,96 @@
+"""Protocol-level DES integration tests (paper §VII methodology)."""
+import random
+
+import pytest
+
+from repro.core.ring import RoutingTable, build_ring
+from repro.core.tuning import EdraParams
+from repro.dht import ChurnConfig, run_churn
+from repro.dht.calot_node import CalotPeer
+from repro.dht.d1ht_node import D1HTPeer
+from repro.dht.des import LanDelay, SimNet
+
+
+def _static_net(cls, n, seed=0):
+    net = SimNet(LanDelay(), seed=seed)
+    params = EdraParams.derive(n, 174 * 60)
+    ids = list(build_ring(n, seed=seed).ids)
+    for pid in ids:
+        net.add_peer(cls(pid, net, params))
+    net.ring = RoutingTable(ids)
+    rng = random.Random(seed + 1)
+    for pid in ids:
+        p = net.peers[pid]
+        p.table = RoutingTable(ids)
+        net.schedule(rng.random() * max(params.theta, 1.0),
+                     (lambda q: (lambda: q.start()))(p))
+    net.run_until(40)
+    return net, params, ids
+
+
+@pytest.mark.parametrize("cls", [D1HTPeer, CalotPeer])
+def test_single_crash_reaches_all_peers(cls):
+    net, params, ids = _static_net(cls, 48)
+    victim = ids[10]
+    net.peers[victim].stop(crash=True)
+    net.ring.remove(victim)
+    net.run_until(40 + 30 * params.theta)
+    stale = [p for p in ids if p != victim
+             and victim in net.peers[p].table]
+    assert not stale
+
+
+@pytest.mark.parametrize("cls", [D1HTPeer, CalotPeer])
+def test_voluntary_leave_faster_than_crash(cls):
+    net, params, ids = _static_net(cls, 32)
+    victim = ids[3]
+    net.peers[victim].stop(crash=False)    # flush + notify successor
+    net.ring.remove(victim)
+    net.run_until(40 + 6 * params.theta)   # well under T_detect-based path
+    stale = [p for p in ids if p != victim and victim in net.peers[p].table]
+    assert not stale
+
+
+def test_join_protocol_propagates():
+    net, params, ids = _static_net(D1HTPeer, 32)
+    joiner = ids[7]
+    net.peers[joiner].stop(crash=True)
+    net.ring.remove(joiner)
+    net.run_until(net.now + 30 * params.theta)
+    succ = net.ring.successor_of(joiner)
+    net.send(joiner, succ, 288, "join-request", None)
+    net.ring.add(joiner)
+    net.run_until(net.now + 30 * params.theta)
+    missing = [p for p in ids if joiner not in net.peers[p].table
+               and net.is_alive(p)]
+    assert not missing
+
+
+@pytest.mark.slow
+def test_churn_one_hop_fraction_c1():
+    """Paper C1: >99% of lookups solved with one hop under churn."""
+    r = run_churn(ChurnConfig(n=256, s_avg=174 * 60, duration=600,
+                              warmup=120, protocol="d1ht", seed=11))
+    assert r.one_hop_fraction >= 0.99
+
+
+@pytest.mark.slow
+def test_churn_bandwidth_matches_analysis_c5():
+    r = run_churn(ChurnConfig(n=256, s_avg=60 * 60, duration=600,
+                              warmup=120, protocol="d1ht", seed=5))
+    ratio = r.mean_out_bps / r.analytical_bps
+    assert 0.6 < ratio < 1.4, ratio
+
+
+@pytest.mark.slow
+def test_quarantine_reduces_traffic_in_des():
+    base = run_churn(ChurnConfig(n=200, s_avg=174 * 60, duration=600,
+                                 warmup=120, protocol="d1ht", seed=7,
+                                 volatile_fraction=0.31))
+    quar = run_churn(ChurnConfig(n=200, s_avg=174 * 60, duration=600,
+                                 warmup=120, protocol="d1ht", seed=7,
+                                 volatile_fraction=0.31,
+                                 quarantine_tq=600.0))
+    assert quar.mean_out_bps < base.mean_out_bps
+    assert quar.quarantine_skipped > 0
+    assert quar.one_hop_fraction >= 0.985

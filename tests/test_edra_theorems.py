@@ -1,0 +1,79 @@
+"""Property tests for EDRA Theorems 1 and 2 (paper §IV-B, §IV-F)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import edra
+from repro.core.tuning import rho
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=2, max_value=4096))
+def test_theorem1_exactly_once(n):
+    """Every peer acknowledges the event exactly once (Theorem 1)."""
+    assert edra.acknowledged_exactly_once(n)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=2, max_value=100_000))
+def test_theorem1_logarithmic_depth(n):
+    """Max hop depth <= rho, average ack time bound rho*Theta/2."""
+    offs = np.arange(n, dtype=np.uint64)
+    depth = edra.ack_depth(offs)
+    p = rho(n)
+    assert int(depth.max()) <= p
+    # avg acknowledge time in synchronous Theta units = mean depth <= rho/2
+    assert float(depth.mean()) <= p / 2 + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=4, max_value=65536))
+def test_theorem2_set_sizes(n):
+    """|{peers whose events p acks with TTL >= l}| == 2^(rho-l) over a
+    full 2^rho ring (Theorem 2; truncated rings can only be smaller)."""
+    p = rho(n)
+    full = 1 << p
+    offs = np.arange(full, dtype=np.uint64)
+    ttls = edra.ack_ttl(offs, full)
+    # peer p acks the event of the subject at offset -i with TTL ttl(i)
+    for l in range(0, p + 1):
+        count = int((ttls >= l).sum())
+        assert count == 2 ** (p - l), (n, l, count)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=2, max_value=4096))
+def test_tree_parent_depth_consistency(n):
+    tree = edra.dissemination_tree(n)
+    offs = tree["offset"]
+    parent = tree["parent"]
+    depth = tree["depth"]
+    nz = offs > 0
+    # each child is exactly one hop deeper than its parent
+    assert (depth[nz] == depth[parent[nz]] + 1).all()
+    # parents clear exactly the lowest set bit
+    assert ((offs[nz] & (offs[nz] - 1)) == parent[nz]).all()
+
+
+def test_forward_targets_respect_rule8():
+    n = 10
+    # reporter forwards with rho=4: targets 1,2,4,8 (all < n)
+    t = edra.forward_targets(0, 4, n)
+    assert [x[0] for x in t] == [8, 4, 2, 1]
+    # offset 8 with ttl 3 would hit 8+2=10, 8+4=12 — discharged (Rule 8)
+    t = edra.forward_targets(8, 3, n)
+    assert [x[0] for x in t] == [9]
+
+
+def test_event_buffer_rules():
+    buf = edra.EventBuffer(rho=4)
+    e_hi = edra.Event(subject_id=1, kind="leave", seq=1)
+    e_lo = edra.Event(subject_id=2, kind="join", seq=2)
+    assert buf.acknowledge(e_hi, 4)
+    assert not buf.acknowledge(e_hi, 2)      # duplicate suppressed
+    assert buf.acknowledge(e_lo, 1)
+    out = buf.flush()
+    # Rule 3: TTL=ttl events go into all messages with lower TTL
+    assert e_hi in out[0] and e_hi in out[3]
+    assert e_lo in out[0] and e_lo not in out[1]
+    assert len(buf) == 0

@@ -1,0 +1,65 @@
+"""Loop-aware HLO cost analyzer vs closed-form FLOP counts."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze
+
+
+def _compile(f, *specs):
+    return jax.jit(f).lower(*specs).compile().as_text()
+
+
+def test_scan_flops_loop_scaled():
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+    r = analyze(_compile(f, x, ws))
+    assert r["matmul_flops"] == 10 * 2 * 64**3
+
+
+def test_nested_scan_flops():
+    def g(x, ws):
+        def outer(c, _):
+            def body(cc, w):
+                return cc @ w, None
+            out, _ = jax.lax.scan(body, c, ws)
+            return out, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 64, 64), jnp.float32)
+    r = analyze(_compile(g, x, ws))
+    assert r["matmul_flops"] == 50 * 2 * 64**3
+
+
+def test_plain_matmul_flops():
+    def h(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    r = analyze(_compile(h, a, b))
+    assert r["matmul_flops"] == 2 * 128 * 256 * 64
+    # boundary bytes at least operands+result
+    assert r["hbm_bytes"] >= (128 * 256 + 256 * 64 + 128 * 64) * 4
+
+
+def test_bytes_scale_with_trip_count():
+    def f(x):
+        def body(c, _):
+            return jnp.tanh(c) * 2.0, None
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    r7 = analyze(_compile(f, x))
+
+    def f1(x):
+        return jnp.tanh(x) * 2.0
+    r1 = analyze(_compile(f1, x))
+    assert r7["hbm_bytes"] >= 5 * max(r1["hbm_bytes"], 1)

@@ -1,0 +1,24 @@
+"""Latency model checks (paper §VII-D, Figs. 5-6)."""
+from repro.dht.latency import dserver_ms, latency_sweep, pastry_ms, single_hop_ms
+
+
+def test_c6_dserver_saturates_single_hop_flat():
+    pts = latency_sweep([800, 1600, 3200, 4000], busy=False)
+    d1 = [p.d1ht_ms for p in pts.values()]
+    ds = [p.dserver_ms for p in pts.values()]
+    # single-hop flat with n; directory server blows up near saturation
+    assert max(d1) / min(d1) < 1.01
+    assert ds[-1] > 10 * d1[-1]          # "order of magnitude" at 4000
+    assert abs(ds[0] - d1[0]) / d1[0] < 1.0   # similar when small
+
+
+def test_pastry_multihop_worse():
+    p = pastry_ms(1600, busy=False, peers_per_node=4)
+    s = single_hop_ms(busy=False, peers_per_node=4)
+    assert p > 3 * s                      # log4(1600) ~ 5.3 hops
+
+
+def test_busy_degrades_with_peers_per_node_not_n():
+    a = single_hop_ms(busy=True, peers_per_node=4)
+    b = single_hop_ms(busy=True, peers_per_node=8)
+    assert b > a

@@ -1,0 +1,61 @@
+"""Consistent-hashing ring invariants (paper §III)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ring import (RING_SIZE, RoutingTable, build_ring, hash_id,
+                             in_interval, ring_distance)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=RING_SIZE - 1),
+                min_size=2, max_size=200, unique=True),
+       st.integers(min_value=0, max_value=RING_SIZE - 1))
+def test_successor_owns_key(ids, key):
+    t = RoutingTable(ids)
+    owner = t.successor_of(key)
+    # no peer lies strictly between the key and its owner (clockwise)
+    for p in t.ids:
+        if p != owner:
+            assert not in_interval(p, key - 1, owner, inclusive_hi=False) \
+                or p == key
+    # bisect semantics: owner is the first id >= key, else wraps to min
+    ge = [p for p in t.ids if p >= key]
+    assert owner == (min(ge) if ge else min(t.ids))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=RING_SIZE - 1),
+                min_size=3, max_size=100, unique=True))
+def test_succ_pred_inverse(ids):
+    t = RoutingTable(ids)
+    for p in t.ids[:10]:
+        assert t.pred(t.succ(p, 1), 1) == p
+        assert t.succ(p, len(t)) == p          # full loop
+
+
+def test_stretch_covers_ring():
+    t = build_ring(17, seed=3)
+    p = t.ids[0]
+    s = t.stretch(p, len(t) - 1)
+    assert sorted(s) == sorted(t.ids)
+
+
+def test_ring_distance_wraps():
+    assert ring_distance(RING_SIZE - 1, 0) == 1
+    assert ring_distance(0, RING_SIZE - 1) == RING_SIZE - 1
+
+
+def test_hash_deterministic():
+    assert hash_id("abc") == hash_id("abc")
+    assert hash_id("abc") != hash_id("abd")
+
+
+def test_add_remove_membership():
+    t = build_ring(32, seed=0)
+    pid = t.ids[5]
+    assert pid in t
+    assert t.remove(pid)
+    assert pid not in t
+    assert not t.remove(pid)
+    assert t.add(pid)
+    assert pid in t

@@ -1,0 +1,106 @@
+"""Membership / quarantine / elastic / placement behaviour."""
+import numpy as np
+import pytest
+
+from repro.core.edra import Event
+from repro.runtime import (ElasticController, FailoverConfig,
+                           FailoverManager, Membership, Placement)
+
+
+def _mk(n=32, t=[0.0]):
+    m = Membership(t_q=60.0, now=lambda: t[0])
+    for i in range(n):
+        m.request_join(f"10.0.0.{i}", 7000 + i)
+    return m, t
+
+
+def test_join_fail_updates_view():
+    m, t = _mk(8)
+    assert m.size() == 8
+    victim = m.members()[2]
+    m.fail(victim)
+    assert m.size() == 7 and victim not in m.members()
+
+
+def test_quarantine_admission_flow():
+    m, t = _mk(4)
+    nid = m.request_join("10.9.9.9", 9999, preemptible=True)
+    assert m.size() == 4                  # not admitted yet (paper §V)
+    t[0] = 30.0
+    assert m.poll_quarantine() == []
+    t[0] = 61.0
+    assert m.poll_quarantine() == [nid]
+    assert m.size() == 5
+    # volatile peer: leaves inside T_q -> no events at all
+    before = m._events_seen
+    nid2 = m.request_join("10.9.9.8", 9998, preemptible=True)
+    m.fail(nid2)
+    assert m._events_seen == before
+
+
+def test_elastic_replan_power_of_two():
+    m, t = _mk(37)
+    c = ElasticController(m, model_axis=4)
+    plan = c.replan()
+    assert plan.model_axis == 4
+    assert plan.data_axis * 4 <= 37
+    assert plan.data_axis in (1, 2, 4, 8)
+    gen = c.generation
+    m.fail(m.members()[0])                # event triggers replan
+    assert c.generation > gen
+
+
+def test_straggler_eviction_rule5_generalized():
+    m, t = _mk(8)
+    c = ElasticController(m, model_axis=1)
+    members = m.members()
+    for i, nid in enumerate(members):
+        c.heartbeat(nid, 1.0)
+    c.heartbeat(members[0], 5.0)          # 5x median
+    out = c.evict_stragglers(factor=2.0)
+    assert out == [members[0]]
+    assert members[0] not in m.members()
+
+
+def test_placement_balance_and_stability():
+    m, t = _mk(64)
+    p = Placement(m.table)
+    stats = p.balance_stats(4096)
+    assert stats["cv"] < 1.5              # consistent hashing variance
+    before = {f"k{i}": p.owner(f"k{i}") for i in range(200)}
+    victim = m.members()[10]
+    m.fail(victim)
+    p2 = Placement(m.table)
+    moved = sum(1 for k, o in before.items()
+                if p2.owner(k) != o)
+    # only the failed node's arc remaps (~1/64 of keys)
+    assert moved <= max(10, int(0.10 * len(before)))
+    for k, o in before.items():
+        if o != victim and p2.owner(k) != o:
+            pytest.fail("key moved although its owner survived")
+
+
+def test_expert_assignment_covers_all_shards():
+    m, t = _mk(64)
+    p = Placement(m.table)
+    assign = p.expert_assignment(128, 16)
+    assert assign.shape == (128,)
+    assert set(assign.tolist()) <= set(range(16))
+    perm = p.expert_permutation(128, 16)
+    assert sorted(perm.tolist()) == list(range(128))
+
+
+def test_failover_save_restore_cycle(tmp_path):
+    m, t = _mk(8)
+    c = ElasticController(m, model_axis=1)
+    f = FailoverManager(FailoverConfig(str(tmp_path), save_every_steps=2,
+                                       keep_last=2), c)
+    state = {"w": np.arange(10.0)}
+    assert f.maybe_save(1, state) is None
+    assert f.maybe_save(2, state) is not None
+    assert not f.needs_restore()
+    m.fail(m.members()[0])
+    assert f.needs_restore()
+    step, restored = f.restore_latest(state)
+    assert step == 2
+    np.testing.assert_array_equal(restored["w"], state["w"])

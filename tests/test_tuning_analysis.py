@@ -1,0 +1,90 @@
+"""Validation of the paper's closed forms against its published numbers."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import analysis as A
+from repro.core.tuning import (EdraParams, event_rate, max_buffered_events,
+                               rho, theta)
+
+# C2: D1HT per-peer maintenance bandwidth at n=1e6 (paper §VIII)
+PAPER_C2 = {60: 20.7e3, 169: 7.3e3, 174: 7.1e3, 780: 1.6e3}
+
+
+@pytest.mark.parametrize("mins,expected", sorted(PAPER_C2.items()))
+def test_c2_paper_bandwidth_numbers(mins, expected):
+    got = A.d1ht_bandwidth(10**6, mins * 60)
+    assert abs(got - expected) / expected < 0.05, (mins, got, expected)
+
+
+def test_c3_orderings_at_scale():
+    """D1HT lowest; ~10x below 1h-Calot and OneHop slice leaders at 1e6;
+    ~OneHop ordinary nodes (paper §VIII)."""
+    n, s = 10**6, 169 * 60
+    d1 = A.d1ht_bandwidth(n, s)
+    ca = A.calot_bandwidth(n, s)
+    oh = A.onehop_bandwidth(n, s)
+    assert d1 < ca and d1 < oh.slice_leader_bps
+    assert ca / d1 > 10 and oh.slice_leader_bps / d1 > 10
+    assert 0.5 < oh.ordinary_bps / d1 < 2.0
+    assert oh.slice_leader_bps > 140e3 * 0.95   # "above 140 kbps"
+    assert ca > 140e3 * 0.9
+
+
+def test_calot_at_least_twice_d1ht_from_small_n():
+    """Paper: 1h-Calot overheads at least 2x D1HT (for n >= ~1e4)."""
+    for n in (10**4, 10**5, 10**6, 10**7):
+        assert A.calot_bandwidth(n, 169 * 60) > \
+            2 * A.d1ht_bandwidth(n, 169 * 60)
+
+
+def test_c4_quarantine_reductions():
+    """~24% (KAD) / ~31% (Gnutella) asymptotically, growing with n."""
+    kad = A.quarantine_reduction(10**7, 169 * 60, 0.24)
+    gnu = A.quarantine_reduction(10**7, 174 * 60, 0.31)
+    assert abs(kad - 0.24) < 0.03
+    assert abs(gnu - 0.31) < 0.03
+    small = A.quarantine_reduction(10**4, 169 * 60, 0.24)
+    assert small < kad    # reduction grows with system size (Fig. 8)
+
+
+def test_fasttrack_supernode_example():
+    """§III: 40K SNs, 2.5h sessions -> ~1 kbps per SN."""
+    b = A.d1ht_bandwidth(40_000, 2.5 * 3600)
+    assert 0.7e3 < b < 1.3e3
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=16, max_value=10**7),
+       st.floats(min_value=600, max_value=10**5))
+def test_theta_positive_and_monotone_in_savg(n, s_avg):
+    th = theta(n, s_avg)
+    assert th > 0
+    assert theta(n, s_avg * 2) > th            # calmer system -> more buffering
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=16, max_value=10**7))
+def test_eq_iv4_consistency(n):
+    """E ~= r * Theta at the operating point (the paper derives E from
+    r = E/Theta)."""
+    s_avg = 169 * 60
+    e = max_buffered_events(n)
+    r = event_rate(n, s_avg)
+    th = theta(n, s_avg)
+    assert math.isclose(e, r * th, rel_tol=1e-9)
+
+
+def test_n_msgs_between_1_and_rho():
+    for n in (100, 10**4, 10**6):
+        r = event_rate(n, 169 * 60)
+        th = theta(n, 169 * 60)
+        nm = A.n_msgs(n, r, th)
+        assert 1.0 <= nm <= rho(n)
+
+
+def test_retune_tracks_observed_rate():
+    p = EdraParams.derive(1000, 174 * 60)
+    p2 = p.retune(observed_n=1000, observed_r=p.r * 4)  # 4x churn
+    assert p2.theta < p.theta                            # buffer less
