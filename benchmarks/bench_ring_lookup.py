@@ -1,0 +1,105 @@
+"""Hot-path benchmark: RingState batched lookup + incremental updates.
+
+Measures, for ring sizes n in {10^3, 10^4, 10^5}:
+
+  * batched-lookup throughput (keys/s) through the device-resident
+    hi/lo table and the ring_lookup64 Pallas kernel (interpret mode by
+    default — on a real TPU pass --no-interpret for compiled numbers);
+  * update latency (events/s) for batched EDRA delta application
+    (joins+leaves merged incrementally, never a full rebuild).
+
+Emits BENCH_ring_lookup.json (cwd by default) so future PRs can track
+the hot path against these numbers.
+
+Usage: PYTHONPATH=src python benchmarks/bench_ring_lookup.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.edra import Event
+from repro.core.ringstate import RingState
+
+RNG = np.random.default_rng(0)
+
+
+def _rand_ids(k: int) -> np.ndarray:
+    x = RNG.integers(0, 2**64, size=2 * k, dtype=np.uint64)
+    x = np.unique(x)[:k]
+    assert x.size == k
+    return x
+
+
+def bench_lookup(state: RingState, q: int, reps: int,
+                 interpret: bool) -> float:
+    keys = RNG.integers(0, 2**64, size=q, dtype=np.uint64)
+    state.lookup(keys, interpret=interpret)  # warmup: upload + jit compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        state.lookup(keys, interpret=interpret)
+    dt = time.perf_counter() - t0
+    return reps * q / dt
+
+
+def bench_updates(state: RingState, batch: int, reps: int) -> float:
+    done = 0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        live = state.active_ids()
+        leave = live[RNG.integers(0, live.size, size=batch // 2)]
+        join = _rand_ids(batch // 2)
+        evs = [Event(subject_id=int(p), kind="leave") for p in leave]
+        evs += [Event(subject_id=int(p), kind="join") for p in join]
+        done += len(evs)
+        state.apply_events(evs)
+    dt = time.perf_counter() - t0
+    return done / dt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_ring_lookup.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer reps / smaller batches (CI smoke)")
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="run the compiled Pallas kernel (real TPU only)")
+    args = ap.parse_args()
+
+    qbatch = 1024 if args.quick else 4096
+    reps = 2 if args.quick else 5
+    results = []
+    for n in (10**3, 10**4, 10**5):
+        state = RingState(_rand_ids(n))
+        keys_per_s = bench_lookup(state, qbatch, reps,
+                                  not args.no_interpret)
+        events_per_s = bench_updates(state, 64, reps * 4)
+        row = {
+            "n": n,
+            "query_batch": qbatch,
+            "lookup_keys_per_s": round(keys_per_s, 1),
+            "update_events_per_s": round(events_per_s, 1),
+            "device_uploads": state.upload_count,
+            "device_capacity": state.device_capacity,
+        }
+        results.append(row)
+        print(f"n={n:>7}  lookup={keys_per_s:>12.0f} keys/s  "
+              f"updates={events_per_s:>10.0f} events/s  "
+              f"uploads={state.upload_count}", flush=True)
+
+    payload = {
+        "benchmark": "ring_lookup",
+        "mode": "pallas-compiled" if args.no_interpret
+                else "pallas-interpret-cpu",
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

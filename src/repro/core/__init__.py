@@ -5,16 +5,19 @@
   tuning     Eqs III.1, IV.1-IV.4 (Theta/E/T_avg self-tuning)
   analysis   Eqs IV.5-IV.7 + 1h-Calot (VII.1) + OneHop + Quarantine models
   quarantine Quarantine admission mechanism (§V)
+  ringstate  unified versioned device-resident routing table (DESIGN.md)
   jax_sim    vectorized JAX protocol simulator (claims C1/C5 at scale)
 """
-from . import analysis, edra, quarantine, ring, tuning
+from . import analysis, edra, quarantine, ring, ringstate, tuning
 from .edra import Event, EventBuffer, dissemination_tree
 from .quarantine import QuarantineManager
 from .ring import RoutingTable, build_ring, hash_id, key_id, peer_id
+from .ringstate import RingState
 from .tuning import EdraParams
 
 __all__ = [
-    "analysis", "edra", "quarantine", "ring", "tuning",
+    "analysis", "edra", "quarantine", "ring", "ringstate", "tuning",
     "Event", "EventBuffer", "dissemination_tree", "QuarantineManager",
-    "RoutingTable", "build_ring", "hash_id", "key_id", "peer_id", "EdraParams",
+    "RingState", "RoutingTable", "build_ring", "hash_id", "key_id",
+    "peer_id", "EdraParams",
 ]

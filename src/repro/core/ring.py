@@ -7,13 +7,19 @@ to SHA-1 truncated to ``ID_BITS`` bits).
 
 This module is deliberately framework-free (pure Python + numpy) so it can
 back both the protocol simulators and the JAX serving/runtime layers.
+
+``RoutingTable`` is a thin compatibility facade over the shared
+``RingState`` core (DESIGN.md §2): the DES peers, the UDP node, and the
+runtime all mutate/read the SAME versioned sorted-array representation
+that the serving router uploads to the device, so there is exactly one
+routing-table implementation in the system.
 """
 from __future__ import annotations
 
-import bisect
 import hashlib
-from dataclasses import dataclass, field
-from typing import Iterable, Iterator, List, Optional, Sequence
+from typing import Iterable, Iterator, List, Optional
+
+from .ringstate import RingState
 
 ID_BITS = 64  # 2**64 ring; plenty for 10^7 peers and keeps IDs in uint64.
 RING_SIZE = 1 << ID_BITS
@@ -50,77 +56,74 @@ def in_interval(x: int, lo: int, hi: int, *, inclusive_hi: bool = True) -> bool:
     return d_x <= d_hi if inclusive_hi else d_x < d_hi
 
 
-@dataclass
 class RoutingTable:
     """A full routing table: the sorted set of all known peer IDs.
 
     Single-hop lookup = find the *successor* of the key ID (the first peer
-    clockwise from the key), exactly as in Chord/D1HT.  Stored as a sorted
-    list for O(log n) bisect lookups; the Pallas ``ring_lookup`` kernel
-    implements the same search vectorized for request batches.
+    clockwise from the key), exactly as in Chord/D1HT.  This class is a
+    compatibility facade over a shared ``RingState`` (sorted uint64
+    buffers + version + quarantine mask); the Pallas ``ring_lookup64``
+    kernel runs the same search vectorized on-device from the state's
+    cached hi/lo word-split table.
     """
 
-    ids: List[int] = field(default_factory=list)
+    __slots__ = ("state",)
 
-    def __post_init__(self) -> None:
-        self.ids = sorted(set(self.ids))
+    def __init__(self, ids: Optional[Iterable[int]] = None, *,
+                 state: Optional[RingState] = None):
+        self.state = state if state is not None else RingState(ids or ())
+
+    @property
+    def ids(self) -> List[int]:
+        """Sorted active peer IDs (quarantined peers are excluded from
+        ownership, paper §V), as Python ints for facade compatibility."""
+        return self.state.active_ids_list()
 
     # -- membership -------------------------------------------------------
     def add(self, pid: int) -> bool:
-        i = bisect.bisect_left(self.ids, pid)
-        if i < len(self.ids) and self.ids[i] == pid:
-            return False
-        self.ids.insert(i, pid)
-        return True
+        return self.state.add(pid)
 
     def remove(self, pid: int) -> bool:
-        i = bisect.bisect_left(self.ids, pid)
-        if i < len(self.ids) and self.ids[i] == pid:
-            del self.ids[i]
-            return True
-        return False
+        return self.state.remove(pid)
 
     def __contains__(self, pid: int) -> bool:
-        i = bisect.bisect_left(self.ids, pid)
-        return i < len(self.ids) and self.ids[i] == pid
+        return pid in self.state
 
     def __len__(self) -> int:
-        return len(self.ids)
+        return len(self.state)
 
     def __iter__(self) -> Iterator[int]:
-        return iter(self.ids)
+        return iter(self.state)
+
+    def __eq__(self, other: object) -> bool:
+        if isinstance(other, RoutingTable):
+            return self.ids == other.ids
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"RoutingTable(n={len(self)}, version={self.state.version})"
 
     # -- ring navigation ---------------------------------------------------
     def successor_of(self, x: int) -> int:
         """First peer clockwise from x (the owner of key x)."""
-        if not self.ids:
-            raise LookupError("empty routing table")
-        i = bisect.bisect_left(self.ids, x)
-        return self.ids[i % len(self.ids)]
+        return self.state.successor_of(x)
 
     def predecessor_of(self, x: int) -> int:
-        if not self.ids:
-            raise LookupError("empty routing table")
-        i = bisect.bisect_left(self.ids, x)
-        return self.ids[(i - 1) % len(self.ids)]
+        return self.state.predecessor_of(x)
 
     def succ(self, p: int, i: int = 1) -> int:
         """succ(p, i): the i-th successor of peer p (paper §IV). succ(p,0)=p."""
-        j = bisect.bisect_left(self.ids, p)
-        if j >= len(self.ids) or self.ids[j] != p:
-            raise LookupError(f"peer {p} not in table")
-        return self.ids[(j + i) % len(self.ids)]
+        return self.state.succ(p, i)
 
     def pred(self, p: int, i: int = 1) -> int:
-        return self.succ(p, -i)
+        return self.state.succ(p, -i)
 
     def stretch(self, p: int, k: int) -> List[int]:
         """stretch(p,k) = {succ(p,i) | 0 <= i <= k} (paper §IV)."""
-        n = len(self.ids)
-        return [self.succ(p, i) for i in range(min(k, n - 1) + 1)]
+        return self.state.stretch(p, k)
 
     def owner(self, key: bytes | str) -> int:
-        return self.successor_of(key_id(key))
+        return self.state.successor_of(key_id(key))
 
 
 def build_ring(num_peers: int, *, seed: int = 0) -> RoutingTable:

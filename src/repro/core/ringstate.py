@@ -1,0 +1,389 @@
+"""RingState — the single device-resident routing-table subsystem.
+
+Every layer that needs key -> owner resolution (the serving router, the
+runtime placement, the DES peers through the ``RoutingTable`` facade, and
+the Pallas ``ring_lookup`` kernel) shares ONE representation of the D1HT
+full routing table (paper §III–IV): a sorted array of full 64-bit peer
+IDs held in preallocated, capacity-doubling numpy buffers, versioned so
+downstream caches (in particular the on-device hi/lo uint32 word-split
+table fed to the kernel) refresh exactly when membership changed and
+never otherwise.
+
+Design points (DESIGN.md §2–§4):
+
+  * **Incremental, batched deltas.**  ``apply_events`` consumes EDRA
+    join/leave events and merges them into the sorted table with
+    O(k log n) searches plus one O(n + k) vectorized placement — never a
+    full re-sort/rebuild, matching EDRA's per-Theta-interval event
+    batches (Rules 1–4).
+  * **Version monotonicity.**  ``version`` strictly increases on every
+    mutation batch; consumers key caches on it.
+  * **Quarantine mask** (paper §V): peers can be present in the state but
+    excluded from ownership while in quarantine, so a quarantined spot
+    node is tracked without ever owning keys/sessions.
+  * **Device residency.**  ``device_table()`` uploads the active table as
+    uint32 (hi, lo) word pairs padded to a power-of-two capacity; the
+    live length travels as data, so the jitted kernel recompiles only
+    when capacity doubles, not on churn.  ``upload_count`` counts actual
+    uploads — the serve-path acceptance tests assert it stays at 1 across
+    unchanged-membership request batches.
+  * **Successor-list replicas** (Leslie, *Reliable Data Storage in
+    Distributed Hash Tables*): ``replica_set(key, r)`` is the r-way
+    successor-list view used for replicated placement.
+
+Framework note: numpy only at module level; jax + the Pallas kernel are
+imported lazily inside the device-path methods so the pure-Python users
+(DES peers, protocol simulators) never pull in jax.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_MIN_CAPACITY = 64
+_MIN_DEVICE_CAPACITY = 2048   # one kernel table tile (kernel.BT)
+_WORD = np.uint64(32)
+_LO_MASK = np.uint64(0xFFFFFFFF)
+
+
+def _as_u64(ids: Iterable[int]) -> np.ndarray:
+    if isinstance(ids, np.ndarray):
+        return ids.astype(np.uint64, copy=False)
+    return np.fromiter((int(i) for i in ids), dtype=np.uint64)
+
+
+class RingState:
+    """Versioned, incrementally-maintained full routing table."""
+
+    def __init__(self, ids: Iterable[int] = (), *,
+                 capacity: int = _MIN_CAPACITY):
+        init = np.unique(_as_u64(ids))
+        cap = max(capacity, _MIN_CAPACITY)
+        while cap < init.size:
+            cap *= 2
+        self._ids = np.zeros(cap, np.uint64)       # sorted live ids in [:_n]
+        self._quar = np.zeros(cap, bool)           # aligned quarantine mask
+        self._ids[:init.size] = init
+        self._n = int(init.size)
+        self.version = 1
+        self.active_version = 1    # bumps only when the ACTIVE view changes
+        self.upload_count = 0
+        self._active_cache: Tuple[int, Optional[np.ndarray]] = (0, None)
+        self._dev_version = 0
+        self._dev: Optional[tuple] = None
+        self._dev_capacity = 0
+
+    # -- capacity management --------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self._ids.size
+
+    def _ensure_capacity(self, need: int) -> None:
+        cap = self._ids.size
+        if need <= cap:
+            return
+        while cap < need:
+            cap *= 2
+        ids = np.zeros(cap, np.uint64)
+        quar = np.zeros(cap, bool)
+        ids[:self._n] = self._ids[:self._n]
+        quar[:self._n] = self._quar[:self._n]
+        self._ids, self._quar = ids, quar
+
+    def _bump(self, active: bool = True) -> None:
+        """Record a mutation.  ``active=False`` marks changes that leave
+        the ownership view intact (e.g. tracking a new quarantined peer)
+        so the device table and active-view caches are NOT invalidated."""
+        self.version += 1
+        if active:
+            self.active_version += 1
+
+    # -- views ----------------------------------------------------------------
+    def __len__(self) -> int:
+        """Number of *active* (non-quarantined) peers."""
+        return int(self.active_ids().size)
+
+    @property
+    def total(self) -> int:
+        """All tracked peers, quarantined included."""
+        return self._n
+
+    def all_ids(self) -> np.ndarray:
+        """Sorted uint64 view of every tracked peer (read-only)."""
+        v = self._ids[:self._n]
+        v.flags.writeable = False
+        return v
+
+    def active_ids(self) -> np.ndarray:
+        """Sorted uint64 array of ownership-eligible peers (cached)."""
+        ver, arr = self._active_cache
+        if ver == self.active_version and arr is not None:
+            return arr
+        live = self._ids[:self._n]
+        arr = live[~self._quar[:self._n]] if self._quar[:self._n].any() \
+            else live.copy()
+        arr.flags.writeable = False
+        self._active_cache = (self.active_version, arr)
+        return arr
+
+    def active_ids_list(self) -> List[int]:
+        return [int(x) for x in self.active_ids()]
+
+    def __iter__(self) -> Iterator[int]:
+        return iter(self.active_ids_list())
+
+    def __contains__(self, pid: int) -> bool:
+        act = self.active_ids()
+        i = int(np.searchsorted(act, np.uint64(pid)))
+        return i < act.size and int(act[i]) == int(pid)
+
+    def is_quarantined(self, pid: int) -> bool:
+        i = int(np.searchsorted(self._ids[:self._n], np.uint64(pid)))
+        return i < self._n and int(self._ids[i]) == int(pid) \
+            and bool(self._quar[i])
+
+    def __repr__(self) -> str:
+        return (f"RingState(n={len(self)}, total={self._n}, "
+                f"version={self.version}, capacity={self.capacity})")
+
+    # -- mutation -------------------------------------------------------------
+    def add(self, pid: int, *, quarantined: bool = False) -> bool:
+        """Insert one peer (or update its quarantine flag). True if the
+        active view changed."""
+        pid = int(pid)
+        i = int(np.searchsorted(self._ids[:self._n], np.uint64(pid)))
+        if i < self._n and int(self._ids[i]) == pid:
+            if bool(self._quar[i]) == quarantined:
+                return False
+            self._quar[i] = quarantined
+            self._bump()
+            return True
+        self._insert_block(np.asarray([pid], np.uint64),
+                           np.asarray([quarantined], bool))
+        self._bump(active=not quarantined)
+        return not quarantined
+
+    def remove(self, pid: int) -> bool:
+        pid = int(pid)
+        i = int(np.searchsorted(self._ids[:self._n], np.uint64(pid)))
+        if i >= self._n or int(self._ids[i]) != pid:
+            return False
+        was_active = not bool(self._quar[i])
+        self._ids[i:self._n - 1] = self._ids[i + 1:self._n]
+        self._quar[i:self._n - 1] = self._quar[i + 1:self._n]
+        self._n -= 1
+        self._bump(active=was_active)
+        return True
+
+    def set_quarantined(self, pid: int, flag: bool) -> bool:
+        """Flip the ownership-exclusion mask for a tracked peer."""
+        i = int(np.searchsorted(self._ids[:self._n], np.uint64(pid)))
+        if i >= self._n or int(self._ids[i]) != int(pid):
+            return False
+        if bool(self._quar[i]) == flag:
+            return False
+        self._quar[i] = flag
+        self._bump()
+        return True
+
+    def apply_events(self, events: Sequence) -> int:
+        """Batched EDRA delta: one merge for a whole Theta-interval flush.
+
+        ``events`` is any sequence of objects with ``subject_id`` and
+        ``kind`` in {"join", "leave"} (repro.core.edra.Event).  Later
+        events win over earlier ones for the same subject (a join + leave
+        in one batch nets out).  Returns the number of table slots that
+        changed; bumps ``version`` iff non-zero.
+        """
+        last: dict = {}
+        for ev in events:
+            last[int(ev.subject_id)] = ev.kind
+        joins = np.array(sorted(p for p, k in last.items() if k == "join"),
+                         np.uint64)
+        leaves = np.array(sorted(p for p, k in last.items() if k != "join"),
+                          np.uint64)
+        changed = active_changed = 0
+        if leaves.size:
+            removed, removed_active = self._remove_block(leaves)
+            changed += removed
+            active_changed += removed_active
+        if joins.size:
+            merged = self._merge_block(joins)  # inserts/unmasks: all active
+            changed += merged
+            active_changed += merged
+        if changed:
+            self._bump(active=active_changed > 0)
+        return changed
+
+    def _merge_block(self, new_ids: np.ndarray) -> int:
+        """Insert sorted unique ``new_ids`` not already present:
+        O(k log n) membership searches + one O(n + k) placement.  A join
+        for a peer already tracked under quarantine clears its mask (an
+        explicit EDRA join event = admission, paper §V)."""
+        live = self._ids[:self._n]
+        pos = np.searchsorted(live, new_ids)
+        present = (pos < self._n) & (live[np.minimum(pos, self._n - 1)]
+                                     == new_ids) if self._n else \
+            np.zeros(new_ids.shape, bool)
+        changed = 0
+        if present.any():
+            at = pos[present]
+            unmasked = self._quar[:self._n][at]
+            self._quar[at[unmasked]] = False
+            changed += int(unmasked.sum())
+        fresh = new_ids[~present]
+        if fresh.size:
+            self._insert_block(fresh, np.zeros(fresh.size, bool))
+            changed += int(fresh.size)
+        return changed
+
+    def _insert_block(self, fresh: np.ndarray, quar: np.ndarray) -> None:
+        """Vectorized multi-insert into the capacity buffer (fresh is
+        sorted, unique, disjoint from the live table)."""
+        n, k = self._n, int(fresh.size)
+        self._ensure_capacity(n + k)
+        old_ids = self._ids[:n].copy()
+        old_quar = self._quar[:n].copy()
+        pos = np.searchsorted(old_ids, fresh)
+        dst_new = pos + np.arange(k)           # final slots of new entries
+        mask = np.ones(n + k, bool)
+        mask[dst_new] = False
+        self._ids[:n + k][mask] = old_ids
+        self._ids[dst_new] = fresh
+        self._quar[:n + k][mask] = old_quar
+        self._quar[dst_new] = quar
+        self._n = n + k
+
+    def _remove_block(self, gone: np.ndarray) -> Tuple[int, int]:
+        """Returns (slots removed, of which were active).  Absent ids are
+        matched elementwise — a miss whose bisect position lands on some
+        *other* departing id must not double-count it."""
+        if not self._n:
+            return 0, 0
+        live = self._ids[:self._n]
+        pos = np.searchsorted(live, gone)
+        ok = pos < self._n
+        hit = pos[ok][live[pos[ok]] == gone[ok]]
+        if not hit.size:
+            return 0, 0
+        keep = np.ones(self._n, bool)
+        keep[hit] = False
+        active_hits = int((~self._quar[:self._n][hit]).sum())
+        m = int(keep.sum())
+        self._ids[:m] = live[keep]
+        self._quar[:m] = self._quar[:self._n][keep]
+        self._n = m
+        return int(hit.size), active_hits
+
+    # -- ring navigation (active view) ---------------------------------------
+    def successor_index(self, x: int) -> int:
+        act = self.active_ids()
+        if not act.size:
+            raise LookupError("empty routing table")
+        return int(np.searchsorted(act, np.uint64(int(x)))) % act.size
+
+    def successor_of(self, x: int) -> int:
+        act = self.active_ids()
+        return int(act[self.successor_index(x)])
+
+    def predecessor_of(self, x: int) -> int:
+        act = self.active_ids()
+        if not act.size:
+            raise LookupError("empty routing table")
+        i = int(np.searchsorted(act, np.uint64(int(x))))
+        return int(act[(i - 1) % act.size])
+
+    def succ(self, p: int, i: int = 1) -> int:
+        """succ(p, i): the i-th successor of peer p (paper §IV)."""
+        act = self.active_ids()
+        j = int(np.searchsorted(act, np.uint64(int(p))))
+        if j >= act.size or int(act[j]) != int(p):
+            raise LookupError(f"peer {p} not in table")
+        return int(act[(j + i) % act.size])
+
+    def stretch(self, p: int, k: int) -> List[int]:
+        """stretch(p,k) = {succ(p,i) | 0 <= i <= k} (paper §IV)."""
+        n = len(self)
+        return [self.succ(p, i) for i in range(min(k, n - 1) + 1)]
+
+    def replica_set(self, key, r: int) -> List[int]:
+        """Successor-list view: the r distinct active peers starting at the
+        key's owner, clockwise with wrap-around — the r-way replica group
+        in the sense of Leslie's reliable-DHT-storage scheme."""
+        act = self.active_ids()
+        if not act.size:
+            raise LookupError("empty routing table")
+        from .ring import key_id  # local: ring imports this module at top
+        x = key if isinstance(key, int) else key_id(key)
+        start = self.successor_index(x)
+        r = min(r, act.size)
+        idx = (start + np.arange(r)) % act.size
+        return [int(v) for v in act[idx]]
+
+    def owner(self, key) -> int:
+        from .ring import key_id
+        x = key if isinstance(key, int) else key_id(key)
+        return self.successor_of(x)
+
+    # -- device-resident table -------------------------------------------------
+    @property
+    def device_capacity(self) -> int:
+        """Padded on-device table length (0 until first upload)."""
+        return self._dev_capacity
+
+    def device_table(self):
+        """(table_hi, table_lo, n) jnp arrays for the ring_lookup64 kernel.
+
+        Rebuilt (and re-uploaded) only when the *active* view moved since
+        the last call (quarantine-only tracking changes don't count);
+        capacity-padded so churn only changes the *data*, never the
+        shapes the jitted kernel specialized on.
+        """
+        if self._dev is not None and self._dev_version == self.active_version:
+            return self._dev
+        import jax.numpy as jnp  # lazy: keep pure-python users jax-free
+
+        act = self.active_ids()
+        n = int(act.size)
+        cap = max(self._dev_capacity, _MIN_DEVICE_CAPACITY)
+        while cap < n:
+            cap *= 2
+        hi = np.zeros(cap, np.uint32)
+        lo = np.zeros(cap, np.uint32)
+        hi[:n] = (act >> _WORD).astype(np.uint32)
+        lo[:n] = (act & _LO_MASK).astype(np.uint32)
+        self._dev = (jnp.asarray(hi), jnp.asarray(lo),
+                     jnp.asarray([n], jnp.int32))
+        self._dev_capacity = cap
+        self._dev_version = self.active_version
+        self.upload_count += 1
+        return self._dev
+
+    def lookup(self, keys: np.ndarray, *, use_pallas: bool = True,
+               interpret: bool = True) -> np.ndarray:
+        """Batched on-device successor lookup: (Q,) uint64 key IDs ->
+        (Q,) uint64 owner peer IDs, via the two-word Pallas kernel.
+        ``interpret=True`` (default) is required on CPU; pass False on a
+        real TPU for the compiled kernel."""
+        import jax.numpy as jnp
+        from repro.kernels.ring_lookup.ops import ring_lookup64
+
+        act = self.active_ids()
+        if not act.size:
+            raise LookupError("empty routing table")
+        keys = np.asarray(keys, np.uint64)
+        thi, tlo, n = self.device_table()
+        khi = jnp.asarray((keys >> _WORD).astype(np.uint32))
+        klo = jnp.asarray((keys & _LO_MASK).astype(np.uint32))
+        idx = np.asarray(ring_lookup64(khi, klo, thi, tlo, n,
+                                       use_pallas=use_pallas,
+                                       interpret=interpret))
+        return act[idx]
+
+    def lookup_keys(self, keys: Sequence[str], *, namespace: str = "") -> np.ndarray:
+        """Hash string keys onto the ring and resolve owners on-device."""
+        from .ring import hash_id
+        ids = np.fromiter(
+            (hash_id(f"{namespace}{k}") for k in keys), np.uint64, len(keys))
+        return self.lookup(ids)

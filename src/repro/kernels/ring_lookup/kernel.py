@@ -64,3 +64,71 @@ def ring_lookup_pallas(keys: jax.Array, table: jax.Array, *,
         interpret=interpret,
     )(keys_p, table_p)
     return (counts[:q] % n).astype(jnp.int32)
+
+
+def _ring_lookup64_kernel(n_ref, qhi_ref, qlo_ref, thi_ref, tlo_ref, o_ref):
+    """Two-word (hi, lo) lexicographic compare-and-count.
+
+    Full 64-bit ring IDs are carried as a uint32 (hi, lo) word pair
+    (DESIGN.md §3): TPUs have no native uint64 lanes, and two uint32
+    compares per entry keep the reduction on the VPU.  ``table < key``
+    lexicographically iff  hi < qhi  or  (hi == qhi and lo < qlo).
+
+    The live table length arrives as data (``n_ref``), not as a Python
+    constant, so the jitted kernel is specialized only on the *capacity*
+    (padded table shape) — membership churn never recompiles it.
+    """
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    n_total = n_ref[0]
+    qhi = qhi_ref[...]                              # (BQ,)
+    qlo = qlo_ref[...]
+    thi = thi_ref[...]                              # (BT,)
+    tlo = tlo_ref[...]
+    base = ti * BT
+    valid = (base + jax.lax.iota(jnp.int32, BT)) < n_total
+    lt = (thi[None, :] < qhi[:, None]) | (
+        (thi[None, :] == qhi[:, None]) & (tlo[None, :] < qlo[:, None]))
+    lt = lt & valid[None, :]
+    o_ref[...] += jnp.sum(lt.astype(jnp.int32), axis=1)
+
+
+def ring_lookup64_pallas(keys_hi: jax.Array, keys_lo: jax.Array,
+                         table_hi: jax.Array, table_lo: jax.Array,
+                         n: jax.Array, *,
+                         interpret: bool = True) -> jax.Array:
+    """64-bit batched successor lookup over a hi/lo split table.
+
+    keys_hi/keys_lo: (Q,) uint32 word pairs of the query IDs;
+    table_hi/table_lo: (CAP,) uint32 word pairs, sorted by (hi, lo) in the
+    first ``n`` slots (the rest is capacity padding, contents ignored);
+    n: (1,) int32 live entry count (dynamic — no recompile on churn).
+    Returns (Q,) int32 successor *indices* into the live table.
+    """
+    q, cap = keys_hi.shape[0], table_hi.shape[0]
+    qp = (q + BQ - 1) // BQ * BQ
+    capp = (cap + BT - 1) // BT * BT
+    keys_hi = jnp.pad(keys_hi, (0, qp - q))
+    keys_lo = jnp.pad(keys_lo, (0, qp - q))
+    table_hi = jnp.pad(table_hi, (0, capp - cap))
+    table_lo = jnp.pad(table_lo, (0, capp - cap))
+    grid = (qp // BQ, capp // BT)
+    counts = pl.pallas_call(
+        _ring_lookup64_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda qi, ti: (0,)),
+            pl.BlockSpec((BQ,), lambda qi, ti: (qi,)),
+            pl.BlockSpec((BQ,), lambda qi, ti: (qi,)),
+            pl.BlockSpec((BT,), lambda qi, ti: (ti,)),
+            pl.BlockSpec((BT,), lambda qi, ti: (ti,)),
+        ],
+        out_specs=pl.BlockSpec((BQ,), lambda qi, ti: (qi,)),
+        out_shape=jax.ShapeDtypeStruct((qp,), jnp.int32),
+        interpret=interpret,
+    )(n.astype(jnp.int32), keys_hi, keys_lo, table_hi, table_lo)
+    return (counts[:q] % n[0]).astype(jnp.int32)

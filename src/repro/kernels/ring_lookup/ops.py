@@ -6,8 +6,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import ring_lookup_pallas
-from .ref import ring_lookup_ref
+from .kernel import ring_lookup64_pallas, ring_lookup_pallas
+from .ref import ring_lookup64_ref, ring_lookup_ref
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -21,3 +21,22 @@ def ring_lookup(keys: jax.Array, table: jax.Array, *,
     if use_pallas:
         return ring_lookup_pallas(keys, table, interpret=interpret)
     return ring_lookup_ref(keys, table)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ring_lookup64(keys_hi: jax.Array, keys_lo: jax.Array,
+                  table_hi: jax.Array, table_lo: jax.Array,
+                  n: jax.Array, *,
+                  use_pallas: bool = True, interpret: bool = True) -> jax.Array:
+    """Full 64-bit successor lookup on a hi/lo word-split device table.
+
+    The table arrays are *capacity* buffers: sorted live entries in the
+    first ``n`` slots (n is a (1,) int32 array, traced — membership churn
+    changes only its value, so the jit cache key is the capacity and the
+    kernel never recompiles until capacity doubles).  Returns successor
+    indices into the live entries.
+    """
+    if use_pallas:
+        return ring_lookup64_pallas(keys_hi, keys_lo, table_hi, table_lo, n,
+                                    interpret=interpret)
+    return ring_lookup64_ref(keys_hi, keys_lo, table_hi, table_lo, n)

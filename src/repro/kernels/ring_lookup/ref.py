@@ -6,6 +6,7 @@ last peer) — identical semantics to repro.core.ring.RoutingTable.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -13,3 +14,25 @@ def ring_lookup_ref(keys: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
     """keys: (Q,) uint32/int32; table: (N,) sorted same dtype -> (Q,) int32."""
     idx = jnp.searchsorted(table, keys, side="left")
     return (idx % table.shape[0]).astype(jnp.int32)
+
+
+def ring_lookup64_ref(keys_hi: jnp.ndarray, keys_lo: jnp.ndarray,
+                      table_hi: jnp.ndarray, table_lo: jnp.ndarray,
+                      n: jnp.ndarray) -> jnp.ndarray:
+    """64-bit oracle on hi/lo uint32 word pairs (no uint64 needed, so it
+    runs without jax x64): bisect_left over the lexicographic order
+
+        (thi, tlo) < (qhi, qlo)  iff  thi < qhi  or (thi == qhi, tlo < qlo)
+
+    computed as a per-query compare-and-count over the ``n`` live entries
+    of the capacity-padded table; vmap keeps the (Q, CAP) compare fused.
+    """
+    cap = table_hi.shape[0]
+    valid = jnp.arange(cap, dtype=jnp.int32) < n[0]
+
+    def count(qh, ql):
+        lt = (table_hi < qh) | ((table_hi == qh) & (table_lo < ql))
+        return jnp.sum(jnp.where(valid & lt, 1, 0))
+
+    counts = jax.vmap(count)(keys_hi, keys_lo)
+    return (counts % n[0]).astype(jnp.int32)

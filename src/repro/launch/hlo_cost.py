@@ -132,7 +132,7 @@ def _parse_op_line(line: str) -> Optional[Op]:
     operand_str = rest[args_start:i - 1]
     attrs = rest[i:]
     operands = []
-    for piece in operand_str.split(","):
+    for piece in _split_top_level(operand_str):
         piece = piece.strip()
         if piece.startswith("%"):
             operands.append(piece[1:])
@@ -142,6 +142,24 @@ def _parse_op_line(line: str) -> Optional[Op]:
                 operands.append(sm.group(1))
     return Op(name, kind, dtype, dims, is_tuple, tuple_type, operands,
               attrs, line)
+
+
+def _split_top_level(s: str) -> List[str]:
+    """Split an operand list on commas that sit outside []/{}/() — shape
+    dims (``f32[128,256]``) and layouts (``{1,0}``) contain commas too."""
+    parts: List[str] = []
+    depth = 0
+    start = 0
+    for i, ch in enumerate(s):
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(s[start:i])
+            start = i + 1
+    parts.append(s[start:])
+    return parts
 
 
 def parse_hlo(text: str) -> Dict[str, Computation]:

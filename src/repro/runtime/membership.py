@@ -25,6 +25,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.edra import Event
 from repro.core.quarantine import QuarantineManager
 from repro.core.ring import RoutingTable, peer_id
+from repro.core.ringstate import RingState
 from repro.core.tuning import EdraParams
 
 
@@ -42,7 +43,10 @@ class Membership:
     def __init__(self, *, s_avg: float = 3600.0, f: float = 0.01,
                  t_q: float = 600.0, now: Callable[[], float] = time.monotonic):
         self.now = now
-        self.table = RoutingTable([])
+        # ONE RingState backs the facade table, the placement layer, and
+        # the serving router's device-resident lookup table (DESIGN.md §4).
+        self.ring_state = RingState()
+        self.table = RoutingTable(state=self.ring_state)
         self.nodes: Dict[int, NodeInfo] = {}
         self.quarantine = QuarantineManager(t_q=t_q)
         self.params = EdraParams.derive(2, s_avg, f)
@@ -81,8 +85,11 @@ class Membership:
                      preemptible: bool = False) -> int:
         nid = peer_id(host, port)
         if preemptible:
-            gateways = list(self.table.ids[:2])
+            gateways = [int(x) for x in self.ring_state.active_ids()[:2]]
             self.quarantine.enqueue(nid, (host, port), self.now(), gateways)
+            # tracked in the shared state but masked out of ownership
+            # until T_q elapses (paper §V): gateways proxy its lookups.
+            self.ring_state.add(nid, quarantined=True)
         else:
             self.admit(nid, (host, port))
         return nid
@@ -100,7 +107,9 @@ class Membership:
 
     def fail(self, nid: int) -> None:
         """Rule-5 style failure: detected by heartbeat silence."""
-        self.quarantine.withdraw(nid)
+        if self.quarantine.withdraw(nid):
+            # volatile peer: drop its masked entry, no event ever reported
+            self.ring_state.remove(nid)
         if nid in self.table:
             self.on_event(Event(subject_id=nid, kind="leave",
                                 seq=self._events_seen + 1))

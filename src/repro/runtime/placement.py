@@ -14,16 +14,27 @@ so elastic re-meshing moves the minimum state.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Sequence, Union
 
 import numpy as np
 
 from repro.core.ring import RoutingTable, hash_id
+from repro.core.ringstate import RingState
 
 
 @dataclass
 class Placement:
-    table: RoutingTable
+    table: Union[RoutingTable, RingState]
+
+    def __post_init__(self) -> None:
+        # accept a raw RingState and wrap it, so Membership / the router
+        # and Placement always consume the same shared state object
+        if isinstance(self.table, RingState):
+            self.table = RoutingTable(state=self.table)
+
+    @property
+    def state(self) -> RingState:
+        return self.table.state
 
     # -- generic key ownership ------------------------------------------------
     def owner(self, key: str) -> int:
@@ -31,6 +42,12 @@ class Placement:
 
     def owners(self, keys: Sequence[str]) -> List[int]:
         return [self.table.owner(k) for k in keys]
+
+    def replica_owners(self, key: str, r: int) -> List[int]:
+        """Successor-list replica group for r-way replicated keys
+        (checkpoint shards, hot KV sessions): the owner plus the next
+        r-1 distinct active peers clockwise."""
+        return self.state.replica_set(key, r)
 
     # -- MoE experts ---------------------------------------------------------------
     def expert_assignment(self, num_experts: int, model_shards: int,

@@ -10,15 +10,15 @@ proxy requests — the paper's gateway mechanism (§V).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.ring import RoutingTable, hash_id
-from repro.kernels.ring_lookup.ops import ring_lookup
+from repro.core.ring import hash_id
+from repro.core.ringstate import RingState
 from repro.models import Model
 from repro.runtime import Membership, Placement
 
@@ -31,21 +31,37 @@ class Request:
 
 
 class SessionRouter:
-    """Batched session -> replica resolution over the ring."""
+    """Batched session -> replica resolution over the ring.
+
+    Routes from the Membership's shared ``RingState``: the sorted table
+    lives on-device as capacity-padded uint32 (hi, lo) word pairs and is
+    re-uploaded only when a membership event bumps the state version —
+    never per request batch — and lookups compare full 64-bit IDs (the
+    old path truncated to the top 32 bits, which collides at scale).
+    """
 
     def __init__(self, membership: Membership):
         self.membership = membership
+        self.state: RingState = membership.ring_state
+        self.events_observed = 0
+        membership.subscribe(self._on_event)
+
+    def _on_event(self, ev) -> None:
+        # The device table refreshes lazily via the state version; the
+        # subscription just tracks churn for observability.
+        self.events_observed += 1
+
+    @property
+    def uploads(self) -> int:
+        """Device-table uploads so far (1 per membership version actually
+        routed against — asserted by the serve acceptance test)."""
+        return self.state.upload_count
 
     def route(self, session_ids: List[str]) -> List[int]:
-        table = np.asarray(
-            [i >> 32 for i in self.membership.members()], np.uint32)
-        table = np.sort(table)
-        keys = np.asarray(
-            [hash_id(f"session/{s}") >> 32 for s in session_ids], np.uint32)
-        idx = np.asarray(ring_lookup(jnp.asarray(keys), jnp.asarray(table)))
-        members_sorted = sorted(self.membership.members(),
-                                key=lambda m: m >> 32)
-        return [members_sorted[i] for i in idx]
+        keys = np.fromiter(
+            (hash_id(f"session/{s}") for s in session_ids),
+            np.uint64, len(session_ids))
+        return [int(p) for p in self.state.lookup(keys)]
 
 
 class Replica:

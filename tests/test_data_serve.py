@@ -40,6 +40,61 @@ def test_session_router_matches_placement():
         assert node in m.members()
     # stability: same input -> same routing
     assert routed == router.route(sids)
+    # full-64-bit agreement with the placement oracle
+    assert routed == [p.session_owner(s) for s in sids]
+
+
+def test_session_router_no_32bit_truncation_collision():
+    """Regression: two peers sharing the same top 32 bits must stay
+    distinct routing targets (the old router truncated IDs to hi words)."""
+    m = Membership()
+    a = (0x1234ABCD << 32) | 0x00000010
+    b = (0x1234ABCD << 32) | 0x00F00000   # same hi word, different lo
+    m.admit(a, ("10.9.0.1", 7000))
+    m.admit(b, ("10.9.0.2", 7000))
+    router = SessionRouter(m)
+    state = m.ring_state
+    # keys straddling the two peers: key just above a must route to b,
+    # key at/below a must route to a
+    assert state.lookup(np.asarray([a - 1], np.uint64))[0] == a
+    assert state.lookup(np.asarray([a + 1], np.uint64))[0] == b
+    assert state.lookup(np.asarray([b + 1], np.uint64))[0] == a  # wrap
+    # and real session routing agrees with the 64-bit oracle (under the
+    # old hi-word truncation a and b were the SAME table entry, so keys
+    # in the (a, b] arc were misrouted to a)
+    sids = [f"collide-{i}" for i in range(256)]
+    routed = router.route(sids)
+    from repro.core.ring import hash_id
+    want = [m.table.successor_of(hash_id(f"session/{s}")) for s in sids]
+    assert routed == want
+
+
+def test_session_router_caches_device_table_across_batches():
+    """Acceptance: 100 consecutive batches against an unchanged 10^4-peer
+    membership reuse ONE uploaded device table, and results match the
+    pure-Python RoutingTable.successor_of oracle on full 64-bit IDs."""
+    from repro.core.ring import build_ring, hash_id
+
+    ring = build_ring(10_000, seed=4)
+    m = Membership()
+    m.table = ring                      # adopt the prebuilt shared state
+    m.ring_state = ring.state
+    router = SessionRouter(m)
+    assert router.uploads == 0
+    seen = []
+    for batch in range(100):
+        sids = [f"s{batch}-{i}" for i in range(32)]
+        routed = router.route(sids)
+        seen.append((sids, routed))
+        assert router.uploads == 1      # single upload, reused 100x
+    for sids, routed in seen[:5] + seen[-5:]:
+        want = [ring.successor_of(hash_id(f"session/{s}")) for s in sids]
+        assert routed == want
+    # a membership event invalidates exactly once
+    nid = m.request_join("10.77.0.1", 7000)
+    routed = router.route(["post-churn"])
+    assert router.uploads == 2
+    assert routed[0] in m.members()
 
 
 @pytest.mark.slow

@@ -1,6 +1,7 @@
 """Property tests for EDRA Theorems 1 and 2 (paper §IV-B, §IV-F)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import edra

@@ -9,8 +9,8 @@ from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.ring_lookup.ops import ring_lookup
-from repro.kernels.ring_lookup.ref import ring_lookup_ref
+from repro.kernels.ring_lookup.ops import ring_lookup, ring_lookup64
+from repro.kernels.ring_lookup.ref import ring_lookup64_ref, ring_lookup_ref
 from repro.kernels.ssm_scan.ops import ssm_scan
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 
@@ -26,6 +26,58 @@ def test_ring_lookup_sweep(n, q):
     got = ring_lookup(jnp.asarray(keys), jnp.asarray(table))
     want = ring_lookup_ref(jnp.asarray(keys), jnp.asarray(table))
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _split64(x):
+    return ((x >> np.uint64(32)).astype(np.uint32),
+            (x & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+
+
+@pytest.mark.parametrize("n,q,cap", [(7, 3, 2048), (500, 257, 2048),
+                                     (4096, 1024, 8192)])
+def test_ring_lookup64_sweep(n, q, cap):
+    """Two-word kernel vs numpy uint64 searchsorted on a capacity-padded
+    table, including IDs that collide in their top 32 bits."""
+    base = RNG.integers(0, 2**64, size=n, dtype=np.uint64)
+    base[1::4] = (base[0::4][: base[1::4].size] | np.uint64(1))  # same-hi pairs
+    table = np.sort(np.unique(base))
+    n_live = table.size
+    keys = np.concatenate([
+        RNG.integers(0, 2**64, size=q, dtype=np.uint64),
+        table[:16], table[:16] + np.uint64(1)])
+    want = (np.searchsorted(table, keys, side="left") % n_live).astype(np.int32)
+    thi = np.zeros(cap, np.uint32)
+    tlo = np.zeros(cap, np.uint32)
+    thi[:n_live], tlo[:n_live] = _split64(table)
+    khi, klo = _split64(keys)
+    narr = jnp.asarray([n_live], jnp.int32)
+    got = ring_lookup64(jnp.asarray(khi), jnp.asarray(klo),
+                        jnp.asarray(thi), jnp.asarray(tlo), narr)
+    ref = ring_lookup64_ref(jnp.asarray(khi), jnp.asarray(klo),
+                            jnp.asarray(thi), jnp.asarray(tlo), narr)
+    np.testing.assert_array_equal(np.asarray(got), want)
+    np.testing.assert_array_equal(np.asarray(ref), want)
+
+
+def test_ring_lookup64_no_recompile_on_churn():
+    """Same capacity, different live count -> one jit trace (static shapes)."""
+    cap, q = 2048, 256
+    keys = RNG.integers(0, 2**64, size=q, dtype=np.uint64)
+    khi, klo = _split64(keys)
+    traces = []
+    for n_live in (100, 101, 612):
+        table = np.sort(np.unique(
+            RNG.integers(0, 2**64, size=n_live, dtype=np.uint64)))
+        thi = np.zeros(cap, np.uint32)
+        tlo = np.zeros(cap, np.uint32)
+        thi[:table.size], tlo[:table.size] = _split64(table)
+        narr = jnp.asarray([table.size], jnp.int32)
+        got = ring_lookup64(jnp.asarray(khi), jnp.asarray(klo),
+                            jnp.asarray(thi), jnp.asarray(tlo), narr)
+        want = (np.searchsorted(table, keys) % table.size).astype(np.int32)
+        np.testing.assert_array_equal(np.asarray(got), want)
+        traces.append(ring_lookup64._cache_size())
+    assert traces[0] == traces[-1]  # no new trace after the first call
 
 
 def test_ring_lookup_boundary_keys():

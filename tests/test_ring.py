@@ -1,5 +1,6 @@
 """Consistent-hashing ring invariants (paper §III)."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ring import (RING_SIZE, RoutingTable, build_ring, hash_id,

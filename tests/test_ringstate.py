@@ -1,0 +1,171 @@
+"""RingState: delta-apply vs full-rebuild equivalence, version
+monotonicity, quarantine masking, replica-set wrap-around, and the
+64-bit device lookup path (kernel + facade oracle)."""
+import numpy as np
+import pytest
+
+from repro.core.edra import Event
+from repro.core.ring import RING_SIZE, RoutingTable, build_ring
+from repro.core.ringstate import RingState
+
+RNG = np.random.default_rng(7)
+
+
+def _rand_ids(k):
+    return [int(x) for x in RNG.integers(0, 2**64, size=k, dtype=np.uint64)]
+
+
+def test_delta_apply_matches_full_rebuild():
+    """Randomized join/leave/quarantine sequences: incrementally applied
+    deltas must land on the same table as a from-scratch rebuild."""
+    state = RingState()
+    alive = set()
+    quarantined = set()
+    pool = _rand_ids(400)
+    for step in range(60):
+        batch = []
+        for _ in range(int(RNG.integers(1, 12))):
+            pid = pool[int(RNG.integers(len(pool)))]
+            if pid in alive and RNG.random() < 0.45:
+                batch.append(Event(subject_id=pid, kind="leave", seq=step))
+                alive.discard(pid)
+                quarantined.discard(pid)
+            else:
+                batch.append(Event(subject_id=pid, kind="join", seq=step))
+                alive.add(pid)
+                quarantined.discard(pid)
+        state.apply_events(batch)
+        # occasional quarantine flips on live peers
+        if alive and RNG.random() < 0.5:
+            pid = list(alive)[int(RNG.integers(len(alive)))]
+            flag = bool(RNG.random() < 0.5)
+            state.set_quarantined(pid, flag)
+            (quarantined.add if flag else quarantined.discard)(pid)
+        rebuild = sorted(alive - quarantined)
+        assert state.active_ids_list() == rebuild
+        assert [int(x) for x in state.all_ids()] == sorted(alive)
+
+
+def test_version_strictly_monotonic_and_noop_safe():
+    state = RingState()
+    versions = [state.version]
+    for pid in _rand_ids(50):
+        state.add(pid)
+        versions.append(state.version)
+    assert all(b > a for a, b in zip(versions, versions[1:]))
+    # no-ops must NOT bump the version (caches stay valid)
+    v = state.version
+    known = state.active_ids_list()[0]
+    assert not state.add(known)
+    assert not state.remove(123456789)  # absent
+    assert state.apply_events([]) == 0
+    assert state.version == v
+
+
+def test_batch_join_leave_nets_out():
+    state = RingState([10, 20, 30])
+    v = state.version
+    # same subject joins then leaves within one EDRA flush: later wins
+    state.apply_events([Event(subject_id=40, kind="join", seq=1),
+                        Event(subject_id=40, kind="leave", seq=2),
+                        Event(subject_id=20, kind="leave", seq=3)])
+    assert state.active_ids_list() == [10, 30]
+    assert state.version > v
+
+
+def test_capacity_doubles_preserving_content():
+    state = RingState(capacity=64)
+    ids = sorted(set(_rand_ids(500)))
+    state.apply_events([Event(subject_id=p, kind="join") for p in ids])
+    assert state.capacity >= 500 and state.capacity % 64 == 0
+    assert state.active_ids_list() == ids
+
+
+def test_replica_set_wraps_at_ring_origin():
+    ids = [100, 200, 300, 400]
+    state = RingState(ids)
+    # key past the largest ID wraps to the ring origin
+    assert state.replica_set(350, 3) == [400, 100, 200]
+    assert state.replica_set(500, 2) == [100, 200]
+    # r larger than the ring truncates to n distinct peers
+    assert state.replica_set(0, 10) == [100, 200, 300, 400]
+    # quarantined peers never appear in a replica set
+    state.set_quarantined(100, True)
+    assert state.replica_set(500, 2) == [200, 300]
+
+
+def test_apply_events_counts_changed_slots_exactly():
+    """A leave for an ABSENT id whose bisect position lands on another
+    departing id must not be double-counted."""
+    state = RingState([7, 100])
+    assert state.apply_events([Event(subject_id=5, kind="leave"),
+                               Event(subject_id=7, kind="leave")]) == 1
+    assert state.active_ids_list() == [100]
+    assert state.apply_events([Event(subject_id=999, kind="leave")]) == 0
+
+
+def test_quarantine_only_changes_keep_device_table_cached():
+    """Tracking a new quarantined peer leaves the active view — and
+    therefore the uploaded device table — untouched."""
+    state = RingState([100, 200, 300])
+    state.device_table()
+    u = state.upload_count
+    av = state.active_version
+    state.add(250, quarantined=True)          # active view unchanged
+    assert state.active_version == av
+    state.device_table()
+    assert state.upload_count == u
+    state.remove(250)                          # quarantined-only removal
+    state.device_table()
+    assert state.upload_count == u
+    state.add(250)                             # real admission invalidates
+    state.device_table()
+    assert state.upload_count == u + 1
+
+
+def test_quarantine_excluded_from_ownership():
+    state = RingState([100, 200, 300])
+    assert state.successor_of(150) == 200
+    state.set_quarantined(200, True)
+    assert state.successor_of(150) == 300
+    assert len(state) == 2 and state.total == 3
+    assert 200 not in state and state.is_quarantined(200)
+    state.set_quarantined(200, False)
+    assert state.successor_of(150) == 200
+
+
+def test_device_lookup_matches_python_oracle():
+    t = build_ring(257, seed=11)
+    state = t.state
+    keys = RNG.integers(0, 2**64, size=513, dtype=np.uint64)
+    owners = state.lookup(keys)
+    want = [t.successor_of(int(k)) for k in keys]
+    assert [int(o) for o in owners] == want
+
+
+def test_device_table_shapes_static_across_churn():
+    """Membership churn must not change the capacity-padded device-table
+    shapes (so the jitted kernel is never re-specialized)."""
+    state = RingState(_rand_ids(300))
+    thi0, tlo0, n0 = state.device_table()
+    u0 = state.upload_count
+    state.apply_events([Event(subject_id=p, kind="join")
+                        for p in _rand_ids(5)])
+    thi1, tlo1, n1 = state.device_table()
+    assert thi1.shape == thi0.shape and tlo1.shape == tlo0.shape
+    assert state.upload_count == u0 + 1
+    # unchanged state -> cached table, no re-upload
+    state.device_table()
+    assert state.upload_count == u0 + 1
+
+
+def test_facade_routingtable_shares_state():
+    t = RoutingTable([5, 15, 25])
+    assert t.state.active_ids_list() == [5, 15, 25]
+    t.add(35)
+    assert 35 in t.state
+    view = RoutingTable(state=t.state)
+    view.remove(15)
+    assert t.ids == [5, 25, 35]
+    assert t.successor_of(30) == 35
+    assert t.successor_of(RING_SIZE - 1) == 5  # wrap

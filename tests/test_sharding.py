@@ -41,24 +41,22 @@ import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.sharding.collectives import (edra_allgather, edra_broadcast,
-                                        edra_allreduce)
-mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+                                        edra_allreduce, shard_map_compat)
+mesh = jax.make_mesh((8,), ("d",))
 x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4)
-ag = jax.shard_map(partial(edra_allgather, axis_name="d"), mesh=mesh,
-                   in_specs=P("d", None), out_specs=P("d", None, None),
-                   check_vma=False)
+ag = shard_map_compat(partial(edra_allgather, axis_name="d"), mesh,
+                      in_specs=P("d", None), out_specs=P("d", None, None))
 got = np.asarray(ag(x)).reshape(8, 8, 4)
 for i in range(8):
     assert (got[i].squeeze() == np.asarray(x)).all()
 for src in (0, 3, 7):
-    bc = jax.shard_map(partial(edra_broadcast, axis_name="d", source=src),
-                       mesh=mesh, in_specs=P("d", None),
-                       out_specs=P("d", None), check_vma=False)
+    bc = shard_map_compat(partial(edra_broadcast, axis_name="d", source=src),
+                          mesh, in_specs=P("d", None),
+                          out_specs=P("d", None))
     got = np.asarray(bc(x))
     assert (got == np.tile(np.asarray(x)[src], (8, 1))).all()
-ar = jax.shard_map(partial(edra_allreduce, axis_name="d"), mesh=mesh,
-                   in_specs=P(None, None), out_specs=P(None, None),
-                   check_vma=False)
+ar = shard_map_compat(partial(edra_allreduce, axis_name="d"), mesh,
+                      in_specs=P(None, None), out_specs=P(None, None))
 y = jnp.arange(5 * 3, dtype=jnp.float32).reshape(5, 3)
 assert np.allclose(np.asarray(ar(y)), np.asarray(y) * 8)
 print("COLLECTIVES_OK")
@@ -80,12 +78,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
-from repro.sharding.collectives import edra_allreduce
+from repro.sharding.collectives import edra_allreduce, shard_map_compat
 
 # data-parallel gradient sync via the paper's dissemination tree:
 # per-shard grads -> reduce-scatter + EDRA-tree all-gather == psum
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ("data",))
 w = jnp.asarray(np.random.default_rng(0).standard_normal((16, 8)),
                 jnp.float32)
 x = jnp.asarray(np.random.default_rng(1).standard_normal((32, 16)),
@@ -98,19 +95,16 @@ def local_grad(w_, x_, y_):
     g = jax.grad(lambda wt: jnp.mean((x_ @ wt - y_) ** 2))(w_)
     return edra_allreduce(g, "data") / 8.0
 
-step = jax.jit(jax.shard_map(local_grad, mesh=mesh,
-                             in_specs=(P(None, None), P("data", None),
-                                       P("data", None)),
-                             out_specs=P(None, None), check_vma=False))
+sm = shard_map_compat(local_grad, mesh,
+                      in_specs=(P(None, None), P("data", None),
+                                P("data", None)),
+                      out_specs=P(None, None))
+step = jax.jit(sm)
 g_edra = np.asarray(step(w, x, y))
 g_ref = np.asarray(jax.grad(lambda wt: jnp.mean((x @ wt - y) ** 2))(w))
 assert np.allclose(g_edra, g_ref, atol=1e-5), np.abs(g_edra - g_ref).max()
 # schedule check: the EDRA path lowers to ppermute rounds, not all-gather
-hlo = jax.jit(jax.shard_map(local_grad, mesh=mesh,
-                            in_specs=(P(None, None), P("data", None),
-                                      P("data", None)),
-                            out_specs=P(None, None), check_vma=False)
-              ).lower(w, x, y).compile().as_text()
+hlo = jax.jit(sm).lower(w, x, y).compile().as_text()
 assert "collective-permute" in hlo
 print("EDRA_GRADSYNC_OK")
 """
