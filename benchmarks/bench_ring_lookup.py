@@ -60,22 +60,18 @@ def bench_updates(state: RingState, batch: int, reps: int) -> float:
     return done / dt
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_ring_lookup.json")
-    ap.add_argument("--quick", action="store_true",
-                    help="fewer reps / smaller batches (CI smoke)")
-    ap.add_argument("--no-interpret", action="store_true",
-                    help="run the compiled Pallas kernel (real TPU only)")
-    args = ap.parse_args()
-
-    qbatch = 1024 if args.quick else 4096
-    reps = 2 if args.quick else 5
+def run(full: bool = False, *, out: str = "BENCH_ring_lookup.json",
+        interpret: bool = True, sizes=None) -> list:
+    """Harness entry point (benchmarks.run registers this): quick sizes
+    unless ``full``; also reused by the __main__ CLI below."""
+    qbatch = 4096 if full else 1024
+    reps = 5 if full else 2
+    if sizes is None:
+        sizes = (10**3, 10**4, 10**5) if full else (10**3, 10**4)
     results = []
-    for n in (10**3, 10**4, 10**5):
+    for n in sizes:
         state = RingState(_rand_ids(n))
-        keys_per_s = bench_lookup(state, qbatch, reps,
-                                  not args.no_interpret)
+        keys_per_s = bench_lookup(state, qbatch, reps, interpret)
         events_per_s = bench_updates(state, 64, reps * 4)
         row = {
             "n": n,
@@ -92,13 +88,26 @@ def main() -> None:
 
     payload = {
         "benchmark": "ring_lookup",
-        "mode": "pallas-compiled" if args.no_interpret
-                else "pallas-interpret-cpu",
+        "mode": "pallas-interpret-cpu" if interpret else "pallas-compiled",
         "results": results,
     }
-    with open(args.out, "w") as f:
+    with open(out, "w") as f:
         json.dump(payload, f, indent=2)
-    print(f"wrote {args.out}")
+    print(f"wrote {out}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_ring_lookup.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer reps / smaller batches (CI smoke)")
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="run the compiled Pallas kernel (real TPU only)")
+    args = ap.parse_args()
+    run(full=not args.quick, out=args.out,
+        interpret=not args.no_interpret,
+        sizes=(10**3, 10**4, 10**5))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,134 @@
+"""Serve-plane benchmark: continuous-batching decode throughput and
+churn migration latency.
+
+Two measurements, emitted to BENCH_serve.json:
+
+  * **decode scaling** — aggregate decode tokens/s as the number of
+    active slots grows on one replica.  The vectorized slot engine steps
+    every active slot per jitted round, so the round time is ~flat and
+    throughput must scale with the active count (the acceptance check:
+    NOT gated by the longest session).
+  * **migration latency** — wall time for the membership-event handler
+    to re-home every affected session (owner_diff -> evict ->
+    re-prefill on the replica_set successor) when a loaded replica is
+    killed mid-decode.
+
+Usage: PYTHONPATH=src python benchmarks/bench_serve.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+try:
+    from .common import emit
+except ImportError:                # standalone: python benchmarks/bench_serve.py
+    from common import emit
+
+
+def _setup(dtype="float32"):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+
+    cfg = get_smoke_config("qwen2.5-3b").with_overrides(dtype=dtype)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, count, seed=0):
+    # prompt lengths cycle over a tiny set so prefill jit-compiles once
+    # per length, not once per session
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (4, 8, 12)[i % 3], dtype=np.int32)
+            for i in range(count)]
+
+
+def bench_decode_scaling(cfg, model, params, *, slots, max_len,
+                         actives, reps) -> list:
+    from repro.serve import Replica, Request
+
+    rows = []
+    for active in actives:
+        rep = Replica(model, slots=slots, max_len=max_len)
+        rep.attach_params(params)
+        for i, p in enumerate(_prompts(cfg, active)):
+            rep.admit(Request(f"b{i}", p, max_new_tokens=max_len))
+        rep.decode_round()                       # warmup: jit trace
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            rep.decode_round()
+        dt = time.perf_counter() - t0
+        tokens_per_s = active * reps / dt
+        round_us = dt / reps * 1e6
+        rows.append({"active_slots": active,
+                     "tokens_per_s": round(tokens_per_s, 1),
+                     "round_us": round(round_us, 1)})
+        emit(f"serve_decode_slots{active}", round_us,
+             f"{tokens_per_s:.0f} tok/s")
+    return rows
+
+
+def bench_migration(cfg, model, params, *, slots, max_len,
+                    sessions, nodes) -> dict:
+    from repro.runtime import Membership
+    from repro.serve import Request, ServeCluster
+
+    m = Membership(t_q=60.0, now=lambda: 0.0)
+    for i in range(nodes):
+        m.request_join(f"10.8.0.{i}", 7000 + i)
+    cluster = ServeCluster(m, model, params, slots=slots, max_len=max_len)
+    for i, p in enumerate(_prompts(cfg, sessions, seed=3)):
+        cluster.submit(Request(f"m{i}", p, max_new_tokens=max_len - 16))
+    cluster.step()                               # warm every replica's jit
+    by_owner: dict = {}
+    for rec in cluster.sessions.values():
+        by_owner.setdefault(rec.owner, []).append(rec)
+    victim = max(by_owner, key=lambda o: len(by_owner[o]))
+    n_victim = len(by_owner[victim])
+    t0 = time.perf_counter()
+    m.fail(victim)                               # handler migrates inline
+    dt = time.perf_counter() - t0
+    moved = cluster.migrated_sessions
+    per_session_ms = dt / max(moved, 1) * 1e3
+    emit("serve_migration_event", dt * 1e6,
+         f"{moved} sessions, {per_session_ms:.1f} ms/session")
+    return {"nodes": nodes, "sessions": sessions,
+            "victim_sessions": n_victim, "sessions_moved": moved,
+            "event_latency_s": round(dt, 4),
+            "per_session_ms": round(per_session_ms, 2)}
+
+
+def run(full: bool = False, out: str = "BENCH_serve.json") -> dict:
+    cfg, model, params = _setup()
+    slots = 16 if full else 8
+    actives = [1, 2, 4, 8] + ([16] if full else [])
+    reps = 50 if full else 15
+    decode = bench_decode_scaling(cfg, model, params, slots=slots,
+                                  max_len=64, actives=actives, reps=reps)
+    migration = bench_migration(cfg, model, params, slots=slots, max_len=64,
+                                sessions=12 if full else 8,
+                                nodes=5 if full else 4)
+    payload = {"benchmark": "serve", "model": cfg.name,
+               "decode": decode, "migration": migration}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    run(full=args.full and not args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,19 @@
-"""Benchmark harness — one module per paper table/figure + roofline.
+"""Benchmark harness — one module per paper table/figure + roofline +
+the system hot paths (ring lookup, serve plane).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,roofline]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,serve]
 
-Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py);
+``ring_lookup`` and ``serve`` additionally emit BENCH_ring_lookup.json /
+BENCH_serve.json so future PRs can track the hot paths.
 """
 from __future__ import annotations
 
 import argparse
 
-from . import (fig3_planetlab_bw, fig4_hpc_bw, fig5_latency,
-               fig7_analytical, fig8_quarantine, roofline,
-               table_validation)
+from . import (bench_ring_lookup, bench_serve, fig3_planetlab_bw,
+               fig4_hpc_bw, fig5_latency, fig7_analytical, fig8_quarantine,
+               roofline, table_validation)
 from .common import header
 
 ALL = {
@@ -21,6 +24,8 @@ ALL = {
     "fig8": fig8_quarantine.run,
     "validation": table_validation.run,
     "roofline": roofline.run,
+    "ring_lookup": bench_ring_lookup.run,
+    "serve": bench_serve.run,
 }
 
 

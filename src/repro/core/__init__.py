@@ -12,12 +12,12 @@ from . import analysis, edra, quarantine, ring, ringstate, tuning
 from .edra import Event, EventBuffer, dissemination_tree
 from .quarantine import QuarantineManager
 from .ring import RoutingTable, build_ring, hash_id, key_id, peer_id
-from .ringstate import RingState
+from .ringstate import OwnerDiff, RingState
 from .tuning import EdraParams
 
 __all__ = [
     "analysis", "edra", "quarantine", "ring", "ringstate", "tuning",
     "Event", "EventBuffer", "dissemination_tree", "QuarantineManager",
-    "RingState", "RoutingTable", "build_ring", "hash_id", "key_id",
+    "OwnerDiff", "RingState", "RoutingTable", "build_ring", "hash_id", "key_id",
     "peer_id", "EdraParams",
 ]

@@ -67,17 +67,25 @@ class RoutingTable:
     cached hi/lo word-split table.
     """
 
-    __slots__ = ("state",)
+    __slots__ = ("state", "_ids_cache")
 
     def __init__(self, ids: Optional[Iterable[int]] = None, *,
                  state: Optional[RingState] = None):
         self.state = state if state is not None else RingState(ids or ())
+        self._ids_cache: tuple = (-1, [])
 
     @property
     def ids(self) -> List[int]:
         """Sorted active peer IDs (quarantined peers are excluded from
-        ownership, paper §V), as Python ints for facade compatibility."""
-        return self.state.active_ids_list()
+        ownership, paper §V), as Python ints for facade compatibility.
+        Cached per active_version: DES hot paths (e.g. Calot stretch
+        counting) read this once per message, and boxing the numpy view
+        every access would be O(n) per call."""
+        ver, lst = self._ids_cache
+        if ver != self.state.active_version:
+            lst = self.state.active_ids_list()
+            self._ids_cache = (self.state.active_version, lst)
+        return lst
 
     # -- membership -------------------------------------------------------
     def add(self, pid: int) -> bool:

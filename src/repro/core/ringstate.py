@@ -37,6 +37,8 @@ imported lazily inside the device-path methods so the pure-Python users
 """
 from __future__ import annotations
 
+from collections import deque
+from dataclasses import dataclass
 from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -45,6 +47,41 @@ _MIN_CAPACITY = 64
 _MIN_DEVICE_CAPACITY = 2048   # one kernel table tile (kernel.BT)
 _WORD = np.uint64(32)
 _LO_MASK = np.uint64(0xFFFFFFFF)
+_DIFF_HISTORY = 128           # retained ownership-diff batches
+
+
+@dataclass(frozen=True)
+class OwnerDiff:
+    """Key ranges whose owner changed between two active-view versions.
+
+    ``arcs`` is a (A, 2) uint64 array of clockwise half-open ring arcs
+    (lo, hi]: a key k lies in an arc iff 0 < (k - lo) mod 2^64 <=
+    (hi - lo) mod 2^64.  ``arcs is None`` means the diff could not be
+    bounded (history evicted, or a view passed through <= 1 active peer)
+    and EVERY key must be treated as affected — consumers fall back to a
+    full re-resolve, never to silent staleness.
+    """
+
+    old_version: int
+    new_version: int
+    arcs: Optional[np.ndarray]
+
+    @property
+    def full(self) -> bool:
+        return self.arcs is None
+
+    def affected(self, keys) -> np.ndarray:
+        """(Q,) uint64 key IDs -> (Q,) bool: owner changed across the diff."""
+        keys = np.asarray(keys, np.uint64)
+        if self.arcs is None:
+            return np.ones(keys.shape, bool)
+        if not self.arcs.size:
+            return np.zeros(keys.shape, bool)
+        lo = self.arcs[:, 0][None, :]
+        hi = self.arcs[:, 1][None, :]
+        d_k = keys[:, None] - lo           # uint64 arithmetic wraps the ring
+        d_hi = hi - lo
+        return ((d_k != np.uint64(0)) & (d_k <= d_hi)).any(axis=1)
 
 
 def _as_u64(ids: Iterable[int]) -> np.ndarray:
@@ -73,6 +110,13 @@ class RingState:
         self._dev_version = 0
         self._dev: Optional[tuple] = None
         self._dev_capacity = 0
+        # ownership-diff log: (active_version, arcs|None) per mutation
+        # batch that moved the active view; None marks an unbounded batch.
+        # Recording is opt-in (track_owner_diffs / first owner_diff call)
+        # so the EDRA delta-apply hot path pays nothing without consumers.
+        self._arc_log: deque = deque()
+        self._diff_enabled = False
+        self._diff_floor = self.active_version   # oldest answerable version
 
     # -- capacity management --------------------------------------------------
     @property
@@ -98,6 +142,82 @@ class RingState:
         self.version += 1
         if active:
             self.active_version += 1
+
+    # -- ownership diffs -------------------------------------------------------
+    def track_owner_diffs(self) -> None:
+        """Start logging ownership-change arcs.  Diff consumers (the
+        serve plane) enable this up front; ``owner_diff`` also enables it
+        on first call (answering that first call conservatively)."""
+        if not self._diff_enabled:
+            self._diff_enabled = True
+            self._diff_floor = self.active_version
+            self._arc_log.clear()
+
+    @staticmethod
+    def _sorted_diff(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+        """a \\ b for sorted-unique uint64 arrays without setdiff1d's
+        re-sorts (this sits on the EDRA delta-apply hot path)."""
+        if not b.size:
+            return a.copy()
+        i = np.minimum(np.searchsorted(b, a), b.size - 1)
+        return a[b[i] != a]
+
+    def _record_arcs(self, old_act: np.ndarray) -> None:
+        """Log the ring arcs whose owner moved in the batch that just
+        bumped ``active_version`` (old_act = active view before it).
+
+        A peer p entering the active view claims (pred_new(p), p]; a peer
+        leaving it releases (pred_old(p), p] to its successor.  The union
+        of those arcs is exactly the set of keys whose owner changed in
+        this batch.  Views passing through <= 1 active peer have no
+        well-defined predecessor arcs and are logged as unbounded."""
+        if not self._diff_enabled:
+            return
+        new_act = self.active_ids()
+        if old_act.size <= 1 or new_act.size <= 1:
+            arcs: Optional[np.ndarray] = None
+        else:
+            added = self._sorted_diff(new_act, old_act)
+            removed = self._sorted_diff(old_act, new_act)
+            segs = []
+            if added.size:
+                i = np.searchsorted(new_act, added)
+                segs.append(np.stack(
+                    [new_act[(i - 1) % new_act.size], added], axis=1))
+            if removed.size:
+                i = np.searchsorted(old_act, removed)
+                segs.append(np.stack(
+                    [old_act[(i - 1) % old_act.size], removed], axis=1))
+            arcs = np.concatenate(segs, axis=0) if segs \
+                else np.zeros((0, 2), np.uint64)
+        self._arc_log.append((self.active_version, arcs))
+        while len(self._arc_log) > _DIFF_HISTORY:
+            self._diff_floor, _ = self._arc_log.popleft()
+
+    def owner_diff(self, old_version: int,
+                   new_version: Optional[int] = None) -> OwnerDiff:
+        """Which key ranges changed owners between two active-view
+        versions (default: now)?  Consumers holding per-key state (the
+        serve plane's sessions) re-resolve ONLY keys inside the returned
+        arcs instead of re-routing everything on every membership batch.
+        A diff older than the retained history is returned as full."""
+        if new_version is None:
+            new_version = self.active_version
+        if old_version > new_version:
+            raise ValueError(f"old_version {old_version} is newer than "
+                             f"new_version {new_version}")
+        self.track_owner_diffs()   # idempotent; arms recording from here
+        if old_version < self._diff_floor:
+            return OwnerDiff(old_version, new_version, None)
+        segs = []
+        for ver, arcs in self._arc_log:
+            if old_version < ver <= new_version:
+                if arcs is None:
+                    return OwnerDiff(old_version, new_version, None)
+                segs.append(arcs)
+        merged = np.concatenate(segs, axis=0) if segs \
+            else np.zeros((0, 2), np.uint64)
+        return OwnerDiff(old_version, new_version, merged)
 
     # -- views ----------------------------------------------------------------
     def __len__(self) -> int:
@@ -152,20 +272,25 @@ class RingState:
         """Insert one peer (or update its quarantine flag). True if the
         active view changed."""
         pid = int(pid)
+        old_act = self.active_ids()
         i = int(np.searchsorted(self._ids[:self._n], np.uint64(pid)))
         if i < self._n and int(self._ids[i]) == pid:
             if bool(self._quar[i]) == quarantined:
                 return False
             self._quar[i] = quarantined
             self._bump()
+            self._record_arcs(old_act)
             return True
         self._insert_block(np.asarray([pid], np.uint64),
                            np.asarray([quarantined], bool))
         self._bump(active=not quarantined)
+        if not quarantined:
+            self._record_arcs(old_act)
         return not quarantined
 
     def remove(self, pid: int) -> bool:
         pid = int(pid)
+        old_act = self.active_ids()
         i = int(np.searchsorted(self._ids[:self._n], np.uint64(pid)))
         if i >= self._n or int(self._ids[i]) != pid:
             return False
@@ -174,10 +299,13 @@ class RingState:
         self._quar[i:self._n - 1] = self._quar[i + 1:self._n]
         self._n -= 1
         self._bump(active=was_active)
+        if was_active:
+            self._record_arcs(old_act)
         return True
 
     def set_quarantined(self, pid: int, flag: bool) -> bool:
         """Flip the ownership-exclusion mask for a tracked peer."""
+        old_act = self.active_ids()
         i = int(np.searchsorted(self._ids[:self._n], np.uint64(pid)))
         if i >= self._n or int(self._ids[i]) != int(pid):
             return False
@@ -185,6 +313,7 @@ class RingState:
             return False
         self._quar[i] = flag
         self._bump()
+        self._record_arcs(old_act)
         return True
 
     def apply_events(self, events: Sequence) -> int:
@@ -203,6 +332,7 @@ class RingState:
                          np.uint64)
         leaves = np.array(sorted(p for p, k in last.items() if k != "join"),
                           np.uint64)
+        old_act = self.active_ids()
         changed = active_changed = 0
         if leaves.size:
             removed, removed_active = self._remove_block(leaves)
@@ -214,6 +344,8 @@ class RingState:
             active_changed += merged
         if changed:
             self._bump(active=active_changed > 0)
+            if active_changed:
+                self._record_arcs(old_act)
         return changed
 
     def _merge_block(self, new_ids: np.ndarray) -> int:
@@ -361,11 +493,11 @@ class RingState:
         return self._dev
 
     def lookup(self, keys: np.ndarray, *, use_pallas: bool = True,
-               interpret: bool = True) -> np.ndarray:
+               interpret: Optional[bool] = None) -> np.ndarray:
         """Batched on-device successor lookup: (Q,) uint64 key IDs ->
         (Q,) uint64 owner peer IDs, via the two-word Pallas kernel.
-        ``interpret=True`` (default) is required on CPU; pass False on a
-        real TPU for the compiled kernel."""
+        ``interpret=None`` (default) autodetects the backend: compiled on
+        real TPUs, interpreter mode elsewhere."""
         import jax.numpy as jnp
         from repro.kernels.ring_lookup.ops import ring_lookup64
 

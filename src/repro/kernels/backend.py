@@ -1,0 +1,24 @@
+"""Backend autodetection shared by the Pallas kernel wrappers.
+
+Pallas kernels compile only for TPU; everywhere else (CPU tests, CI,
+interactive runs) they must execute in interpreter mode.  Call sites used
+to hardcode ``interpret=True``, which silently kept the *interpreted*
+kernel on real TPUs too — production paths now resolve the flag from the
+actual backend unless the caller pins it explicitly.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """True iff Pallas kernels must run interpreted (any non-TPU backend)."""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """``None`` -> autodetect; an explicit bool wins."""
+    return default_interpret() if interpret is None else bool(interpret)

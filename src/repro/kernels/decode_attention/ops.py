@@ -1,10 +1,17 @@
-"""Jit'd public wrapper for decode attention."""
+"""Jit'd public wrapper for decode attention.
+
+``interpret=None`` (the default) autodetects the backend: the compiled
+Pallas kernel on TPU, interpreter mode everywhere else — so serving code
+threads no flag and still gets the real kernel in production.
+"""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 
+from ..backend import resolve_interpret
 from .kernel import decode_attention_pallas
 from .ref import decode_attention_ref
 
@@ -12,8 +19,8 @@ from .ref import decode_attention_ref
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      length: jax.Array, *, use_pallas: bool = True,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: Optional[bool] = None) -> jax.Array:
     if use_pallas:
         return decode_attention_pallas(q, k_cache, v_cache, length,
-                                       interpret=interpret)
+                                       interpret=resolve_interpret(interpret))
     return decode_attention_ref(q, k_cache, v_cache, length)

@@ -2,24 +2,28 @@
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..backend import resolve_interpret
 from .kernel import ring_lookup64_pallas, ring_lookup_pallas
 from .ref import ring_lookup64_ref, ring_lookup_ref
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def ring_lookup(keys: jax.Array, table: jax.Array, *,
-                use_pallas: bool = True, interpret: bool = True) -> jax.Array:
+                use_pallas: bool = True,
+                interpret: Optional[bool] = None) -> jax.Array:
     """keys (Q,), sorted table (N,) -> successor indices (Q,) int32.
 
-    ``interpret=True`` (default) runs the Pallas kernel body in the
-    interpreter — required on CPU; set False on real TPUs.
+    ``interpret=None`` (default) autodetects: compiled on TPU,
+    interpreter mode everywhere else.
     """
     if use_pallas:
-        return ring_lookup_pallas(keys, table, interpret=interpret)
+        return ring_lookup_pallas(keys, table,
+                                  interpret=resolve_interpret(interpret))
     return ring_lookup_ref(keys, table)
 
 
@@ -27,7 +31,8 @@ def ring_lookup(keys: jax.Array, table: jax.Array, *,
 def ring_lookup64(keys_hi: jax.Array, keys_lo: jax.Array,
                   table_hi: jax.Array, table_lo: jax.Array,
                   n: jax.Array, *,
-                  use_pallas: bool = True, interpret: bool = True) -> jax.Array:
+                  use_pallas: bool = True,
+                  interpret: Optional[bool] = None) -> jax.Array:
     """Full 64-bit successor lookup on a hi/lo word-split device table.
 
     The table arrays are *capacity* buffers: sorted live entries in the
@@ -38,5 +43,5 @@ def ring_lookup64(keys_hi: jax.Array, keys_lo: jax.Array,
     """
     if use_pallas:
         return ring_lookup64_pallas(keys_hi, keys_lo, table_hi, table_lo, n,
-                                    interpret=interpret)
+                                    interpret=resolve_interpret(interpret))
     return ring_lookup64_ref(keys_hi, keys_lo, table_hi, table_lo, n)

@@ -171,13 +171,32 @@ def _flash_tri(qt, kt, vt, chunk):
 
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                     length: Optional[jax.Array] = None) -> jax.Array:
+                     length: Optional[jax.Array] = None, *,
+                     use_kernel: Optional[bool] = None) -> jax.Array:
     """Single-position attention over a KV cache.
 
-    q: (B,1,H,hd); caches: (B,S,Hkv,hd). ``length`` masks valid positions.
+    q: (B,1,H,hd); caches: (B,S,Hkv,hd). ``length`` (B,) masks valid
+    positions *per row*, so every slot of a continuous-batching replica
+    attends at its own cache position.  When the cache length is
+    kernel-tileable the Pallas decode kernel streams it (compiled on TPU,
+    interpreted elsewhere); ``use_kernel`` pins the choice.
     """
     b, _, h, hd = q.shape
     hkv = k_cache.shape[2]
+    if use_kernel is None:
+        from repro.kernels.backend import default_interpret
+        from repro.kernels.decode_attention.kernel import BS as _BS
+        # auto only picks the kernel where it COMPILES: interpret mode
+        # exists for correctness, not speed — on non-TPU backends the jnp
+        # reference path is ~2x faster, so it stays unless pinned
+        use_kernel = length is not None and k_cache.shape[1] % _BS == 0 \
+            and h % hkv == 0 and not default_interpret()
+    if use_kernel:
+        from repro.kernels.decode_attention.ops import \
+            decode_attention as _kernel_decode
+        out = _kernel_decode(q[:, 0], k_cache, v_cache,
+                             jnp.asarray(length, jnp.int32))
+        return out[:, None].astype(q.dtype)
     k = _repeat_kv(k_cache, h // hkv)
     v = _repeat_kv(v_cache, h // hkv)
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
@@ -225,8 +244,16 @@ def attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
               cache: Optional[Tuple[jax.Array, jax.Array]] = None,
               cache_index: Optional[jax.Array] = None,
               use_rope: bool = True,
-              impl: str = "full") -> Tuple[jax.Array, Optional[Tuple]]:
-    """GQA attention. Returns (out, new_cache)."""
+              impl: str = "full",
+              decode_kernel: Optional[bool] = None
+              ) -> Tuple[jax.Array, Optional[Tuple]]:
+    """GQA attention. Returns (out, new_cache).
+
+    ``cache_index`` is either a scalar (prefill / lockstep decode: every
+    row writes at the same position) or a (B,) array of per-slot cache
+    positions (continuous-batching decode: each slot advances at its own
+    length; requires s == 1).
+    """
     b, s, d = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     src = x if kv_x is None else kv_x
@@ -243,14 +270,22 @@ def attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
     new_cache = None
     if cache is not None:
         k_cache, v_cache = cache
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
+        idx = jnp.asarray(cache_index)
+        if idx.ndim:                       # per-slot positions, s == 1 only
+            rows = jnp.arange(b)
+            k_cache = k_cache.at[rows, idx].set(k[:, 0].astype(k_cache.dtype))
+            v_cache = v_cache.at[rows, idx].set(v[:, 0].astype(v_cache.dtype))
+            lengths = idx + 1
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), idx, axis=1)
+            lengths = jnp.full((b,), idx + s)
         new_cache = (k_cache, v_cache)
         if s == 1:
-            out = decode_attention(q, k_cache, v_cache,
-                                   length=jnp.full((b,), cache_index + s))
+            out = decode_attention(q, k_cache, v_cache, length=lengths,
+                                   use_kernel=decode_kernel)
         else:
             # prefill: attend over the fresh segment with flash (the cache
             # is being filled from scratch) — never materialize S x S
@@ -319,10 +354,16 @@ def mla_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
     if cache is not None:
         # MLA's serving win: cache only (c_kv, k_rope) — r_kv + qk_r per pos
         c_cache, r_cache = cache
-        c_cache = jax.lax.dynamic_update_slice_in_dim(
-            c_cache, c_kv.astype(c_cache.dtype), cache_index, axis=1)
-        r_cache = jax.lax.dynamic_update_slice_in_dim(
-            r_cache, k_rope.astype(r_cache.dtype), cache_index, axis=1)
+        idx = jnp.asarray(cache_index)
+        if idx.ndim:                       # per-slot positions, s == 1 only
+            rows = jnp.arange(b)
+            c_cache = c_cache.at[rows, idx].set(c_kv[:, 0].astype(c_cache.dtype))
+            r_cache = r_cache.at[rows, idx].set(k_rope[:, 0].astype(r_cache.dtype))
+        else:
+            c_cache = jax.lax.dynamic_update_slice_in_dim(
+                c_cache, c_kv.astype(c_cache.dtype), idx, axis=1)
+            r_cache = jax.lax.dynamic_update_slice_in_dim(
+                r_cache, k_rope.astype(r_cache.dtype), idx, axis=1)
         new_cache = (c_cache, r_cache)
 
     if cache is not None and s == 1:
@@ -339,7 +380,10 @@ def mla_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
                          preferred_element_type=jnp.float32)
         scores = (s_c + s_r) * scale
         pos = jnp.arange(c_cache.shape[1])
-        valid = pos[None, None, None, :] < (cache_index + 1)
+        lim = jnp.asarray(cache_index) + 1
+        if lim.ndim:                       # per-slot lengths: (B,) -> (B,1,1,1)
+            lim = lim[:, None, None, None]
+        valid = pos[None, None, None, :] < lim
         scores = jnp.where(valid, scores, -1e30)
         p = jax.nn.softmax(scores, axis=-1).astype(c_cache.dtype)
         out_c = jnp.einsum("bhsT,bTr->bshr", p, c_cache)     # (B,1,H,r_kv)

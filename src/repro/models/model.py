@@ -36,6 +36,10 @@ def _module(cfg: ModelConfig):
 class Model:
     cfg: ModelConfig
     attn_impl: str = "full"   # "full" (baseline) | "tri" (§Perf optimized)
+    # Pallas decode-attention kernel: None = auto (kernel iff the cache
+    # length is tileable; compiled on TPU, interpreted elsewhere),
+    # True/False pins it.  Serving threads this through to the kernel.
+    decode_use_kernel: Optional[bool] = None
 
     # -- parameters ----------------------------------------------------------
     def init(self, rng) -> Params:
@@ -80,10 +84,24 @@ class Model:
         return mod.forward_with_cache(params, batch["tokens"], cache, cfg,
                                       idx, impl=self.attn_impl)
 
+    @property
+    def supports_per_slot_decode(self) -> bool:
+        """True when decode_step accepts a (B,) per-slot index array
+        (transformer families; SSM/hybrid/enc-dec decode in lockstep)."""
+        return _module(self.cfg) is transformer
+
     def decode_step(self, params: Params, cache, tokens: jax.Array,
                     index) -> Tuple[jax.Array, Any]:
-        """One token per sequence; ``index`` is the current cache length."""
-        return _module(self.cfg).forward_with_cache(
+        """One token per sequence.  ``index`` is the current cache length:
+        a scalar steps every row in lockstep; a (B,) array steps each slot
+        at its OWN position (continuous batching over mixed-length
+        sessions; only when ``supports_per_slot_decode``)."""
+        mod = _module(self.cfg)
+        if mod is transformer:
+            return mod.forward_with_cache(
+                params, tokens, cache, self.cfg, index, impl=self.attn_impl,
+                decode_kernel=self.decode_use_kernel)
+        return mod.forward_with_cache(
             params, tokens, cache, self.cfg, index, impl=self.attn_impl)
 
     # -- dry-run helpers ------------------------------------------------------------

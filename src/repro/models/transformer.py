@@ -84,7 +84,9 @@ def param_pspecs(cfg: ModelConfig) -> Params:
 def _layer_body(cfg: ModelConfig, lp: Params, x: jax.Array, *,
                 positions: jax.Array, impl: str,
                 cache: Optional[Tuple] = None,
-                cache_index=None) -> Tuple[jax.Array, Optional[Tuple]]:
+                cache_index=None,
+                decode_kernel: Optional[bool] = None
+                ) -> Tuple[jax.Array, Optional[Tuple]]:
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
     if cfg.mla_kv_lora:
         a, new_cache = L.mla_attention(lp["attn"], h, cfg, positions=positions,
@@ -93,7 +95,8 @@ def _layer_body(cfg: ModelConfig, lp: Params, x: jax.Array, *,
     else:
         a, new_cache = L.attention(lp["attn"], h, cfg, positions=positions,
                                    causal=True, cache=cache,
-                                   cache_index=cache_index, impl=impl)
+                                   cache_index=cache_index, impl=impl,
+                                   decode_kernel=decode_kernel)
     x = x + a
     h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
     if cfg.moe_experts:
@@ -194,20 +197,29 @@ def _cache_dict(cfg, tup):
 def forward_with_cache(params: Params, tokens: jax.Array, cache: Dict,
                        cfg: ModelConfig, cache_index, *,
                        impl: str = "full",
+                       decode_kernel: Optional[bool] = None,
                        image_embeds: Optional[jax.Array] = None
                        ) -> Tuple[jax.Array, Dict]:
-    """Prefill (S>1) or decode (S==1): returns (last-position logits, cache)."""
+    """Prefill (S>1) or decode (S==1): returns (last-position logits, cache).
+
+    ``cache_index`` may be a scalar (prefill / lockstep decode) or a (B,)
+    array of per-slot cache positions (continuous-batching decode: every
+    row writes and attends at its own length).
+    """
     x = L.embed(params["embed"], tokens, cfg)
     if image_embeds is not None:
         x = jnp.concatenate([image_embeds.astype(x.dtype), x], axis=1)
     s = x.shape[1]
-    positions = cache_index + jnp.broadcast_to(jnp.arange(s), x.shape[:2])
+    idx = jnp.asarray(cache_index)
+    off = idx[:, None] if idx.ndim else idx
+    positions = off + jnp.broadcast_to(jnp.arange(s), x.shape[:2])
 
     def body(carry, xs):
         lp, cl = xs
         out, new_cache = _layer_body(cfg, lp, carry, positions=positions,
                                      impl=impl, cache=_cache_tuple(cfg, cl),
-                                     cache_index=cache_index)
+                                     cache_index=idx,
+                                     decode_kernel=decode_kernel)
         return out, _cache_dict(cfg, new_cache)
 
     x, new_caches = jax.lax.scan(body, x, (params["layers"], cache))

@@ -1,7 +1,8 @@
 from .elastic import ElasticController, MeshPlan
-from .failover import FailoverConfig, FailoverManager
+from .failover import FailoverConfig, FailoverManager, ReplicaSupervisor
 from .membership import Membership, NodeInfo
 from .placement import Placement
 
 __all__ = ["ElasticController", "MeshPlan", "FailoverConfig",
-           "FailoverManager", "Membership", "NodeInfo", "Placement"]
+           "FailoverManager", "ReplicaSupervisor", "Membership", "NodeInfo",
+           "Placement"]

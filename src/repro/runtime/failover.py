@@ -6,15 +6,21 @@ the trainer (a) drains in-flight steps, (b) restores the latest complete
 checkpoint re-sharded to the new mesh, (c) resumes.  Restore-to-any-mesh
 comes from repro.ckpt (host-side arrays + device_put with the new
 shardings).
+
+``ReplicaSupervisor`` is the serve-plane counterpart: instead of
+checkpoints it tracks per-node membership generations so the serve
+cluster knows when a node's device-resident state (KV slabs) must be
+treated as lost and its replica restarted rather than resumed.
 """
 from __future__ import annotations
 
 import os
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
 from repro import ckpt as ckpt_lib
 from .elastic import ElasticController
+from .membership import Membership
 
 
 @dataclass
@@ -61,3 +67,35 @@ class FailoverManager:
                                  shardings)
         self._seen_generation = self.controller.generation
         return step, state
+
+
+class ReplicaSupervisor:
+    """Membership-generation clock for serving replicas.
+
+    Every membership event bumps the global generation.  A node that
+    leaves (crash/preemption) has its *required* generation pinned to the
+    bump, so a replica stamped before that point — i.e. whose device
+    state predates the departure — must be restarted with a fresh cache
+    if the node ever re-enters the ring; its sessions were already
+    migrated off by the serve cluster and must re-prefill, never resume
+    against a stale slab.
+    """
+
+    def __init__(self, membership: Membership):
+        self.generation = 0
+        self._required: Dict[int, int] = {}
+        membership.subscribe(self._on_event)
+
+    def _on_event(self, ev) -> None:
+        self.generation += 1
+        if ev.kind != "join":              # leave/quarantine invalidates
+            self._required[ev.subject_id] = self.generation
+
+    def stamp(self) -> int:
+        """Generation to tag a freshly created replica with."""
+        return self.generation
+
+    def needs_restart(self, node_id: int, stamp: int) -> bool:
+        """True iff the node suffered an event since ``stamp`` that
+        invalidates device state created under it."""
+        return stamp < self._required.get(node_id, 0)

@@ -43,6 +43,7 @@ class Membership:
     def __init__(self, *, s_avg: float = 3600.0, f: float = 0.01,
                  t_q: float = 600.0, now: Callable[[], float] = time.monotonic):
         self.now = now
+        self._t0 = now()   # event-rate window anchor (see _retune)
         # ONE RingState backs the facade table, the placement layer, and
         # the serving router's device-resident lookup table (DESIGN.md §4).
         self.ring_state = RingState()
@@ -73,9 +74,15 @@ class Membership:
 
     def _retune(self) -> None:
         """§IV-D self-organization: re-derive Theta from the locally
-        observed event rate — no coordination required."""
+        observed event rate — no coordination required.
+
+        The rate window is time since *this view was constructed*, not
+        the raw clock value: ``time.monotonic`` counts from boot (or an
+        arbitrary epoch), so dividing by it deflated r by orders of
+        magnitude and Theta retuning was wildly off on any host with
+        nontrivial uptime."""
         n = max(len(self.table), 2)
-        window = max(self.now(), 1.0)
+        window = max(self.now() - self._t0, 1.0)
         r = self._events_seen / window
         if r > 0:
             self.params = self.params.retune(n, r)
@@ -87,9 +94,15 @@ class Membership:
         if preemptible:
             gateways = [int(x) for x in self.ring_state.active_ids()[:2]]
             self.quarantine.enqueue(nid, (host, port), self.now(), gateways)
-            # tracked in the shared state but masked out of ownership
-            # until T_q elapses (paper §V): gateways proxy its lookups.
-            self.ring_state.add(nid, quarantined=True)
+            if nid in self.table:
+                # an ACTIVE member restarting as a spot instance: re-mask
+                # through quarantine_member so listeners migrate its
+                # owned state (a bare flag flip would orphan it)
+                self.quarantine_member(nid)
+            else:
+                # tracked in the shared state but masked out of ownership
+                # until T_q elapses (paper §V): gateways proxy its lookups.
+                self.ring_state.add(nid, quarantined=True)
         else:
             self.admit(nid, (host, port))
         return nid
@@ -107,12 +120,30 @@ class Membership:
 
     def fail(self, nid: int) -> None:
         """Rule-5 style failure: detected by heartbeat silence."""
-        if self.quarantine.withdraw(nid):
-            # volatile peer: drop its masked entry, no event ever reported
+        if self.quarantine.withdraw(nid) and nid not in self.nodes:
+            # volatile peer: never admitted, no event was ever reported,
+            # so none is reported now — just drop its masked entry
             self.ring_state.remove(nid)
-        if nid in self.table:
+            return
+        # an active member, OR a member re-masked under quarantine — its
+        # original join WAS disseminated, so its death must be too (the
+        # facade's membership check sees only the active view)
+        if nid in self.table or self.ring_state.is_quarantined(nid):
             self.on_event(Event(subject_id=nid, kind="leave",
                                 seq=self._events_seen + 1))
+
+    def quarantine_member(self, nid: int) -> bool:
+        """Move an ACTIVE member back under the §V mask (straggler /
+        flash-crowd damping): it stops owning keys and sessions but stays
+        tracked and may keep proxying lookups as a gateway.  No EDRA
+        leave event is disseminated — the node did not leave — but local
+        listeners (the serve plane) are told so owned state migrates."""
+        if not self.ring_state.set_quarantined(nid, True):
+            return False
+        for fn in self._listeners:
+            fn(Event(subject_id=nid, kind="quarantine",
+                     seq=self._events_seen + 1))
+        return True
 
     # -- views ---------------------------------------------------------------------
     def size(self) -> int:

@@ -1,3 +1,5 @@
-from .server import Replica, Request, SessionRouter
+from .cluster import ServeCluster, SessionRecord
+from .server import Replica, Request, SessionRouter, session_key
 
-__all__ = ["Replica", "Request", "SessionRouter"]
+__all__ = ["Replica", "Request", "ServeCluster", "SessionRecord",
+           "SessionRouter", "session_key"]

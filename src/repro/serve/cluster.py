@@ -1,0 +1,281 @@
+"""ServeCluster — churn-aware continuous-batching orchestration over the
+D1HT ring.
+
+The serving layer used to *route* with the ring and stop there: when a
+replica failed, its sessions were silently orphaned.  ServeCluster closes
+the loop, turning RingState into an end-to-end serve plane:
+
+  * **Ownership**: a session's key is its ring hash; its home replica is
+    the key's successor, resolved through the shared device-resident
+    table (one hop, no directory — the paper's whole point).
+  * **Membership subscription**: on every leave/quarantine/join batch the
+    cluster asks ``RingState.owner_diff`` which key RANGES moved and
+    re-resolves only the sessions inside them — O(affected), not
+    O(sessions) per event.
+  * **Migration**: an affected session moves to its ``replica_set``
+    successor (Leslie's r-way successor-list replica group) and is
+    re-prefilled from its transcript — the control plane keeps every
+    session's prompt + generated tokens as the recoverable hot state
+    (DistHash's replicated-object model), so a crash loses no session
+    even though the device slab is gone.
+  * **Quarantine gateways** (paper §V): a quarantined node owns no
+    sessions (the mask excludes it from the active view) but proxies
+    submissions to the real owner, paying one extra nearby hop.
+  * **Generation restarts**: ``runtime.failover.ReplicaSupervisor`` pins
+    a required generation per departed node; a node re-entering the ring
+    gets a FRESH replica (its old slab is stale) instead of resuming.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.models import Model
+from repro.runtime import Membership, ReplicaSupervisor
+
+from .server import Replica, Request, SessionRouter, session_key
+
+
+@dataclass
+class SessionRecord:
+    """Control-plane view of one session — everything needed to rebuild
+    it anywhere (the recoverable hot state)."""
+
+    session_id: str
+    key: int                       # ring key id
+    prompt: np.ndarray
+    max_new_tokens: int
+    owner: int = -1
+    generated: List[int] = field(default_factory=list)
+    migrations: int = 0
+    done: bool = False
+
+    @property
+    def transcript(self) -> np.ndarray:
+        """prompt + every generated token: re-prefilling this on a new
+        replica reproduces the decode state exactly (the last generated
+        token is the pending input, so the prefill's next-token output is
+        bit-for-bit what the old replica's next round would have
+        emitted)."""
+        if not self.generated:
+            return np.asarray(self.prompt, np.int32)
+        return np.concatenate([np.asarray(self.prompt, np.int32),
+                               np.asarray(self.generated, np.int32)])
+
+
+class ServeCluster:
+    """Cluster-wide serve plane: replicas keyed by ring node, sessions
+    migrated on churn, quarantined nodes proxying as gateways."""
+
+    def __init__(self, membership: Membership, model: Model, params, *,
+                 slots: int = 8, max_len: int = 64, replication: int = 2,
+                 decode_kernel: Optional[bool] = None):
+        self.membership = membership
+        self.state = membership.ring_state
+        self.model = model if decode_kernel is None else \
+            dataclasses.replace(model, decode_use_kernel=decode_kernel)
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.replication = replication
+        self.router = SessionRouter(membership)
+        self.supervisor = ReplicaSupervisor(membership)
+        self.replicas: Dict[int, Replica] = {}
+        self.sessions: Dict[str, SessionRecord] = {}
+        self.proxied: Dict[int, int] = {}      # gateway node -> proxy count
+        self.migrated_sessions = 0
+        self.stranded = 0                  # handoff attempts deferred on
+        self.state.track_owner_diffs()     # arm arc logging before events
+        self._seen_version = self.state.active_version
+        membership.subscribe(self._on_event)
+
+    # -- replica lifecycle ---------------------------------------------------
+    def _live_replica(self, node: int) -> Optional[Replica]:
+        """The node's replica iff its device state is still valid.  A
+        slab built before the node left and re-entered is stale —
+        discarded here, so every caller (capacity probe, residency
+        check, admit) agrees on restart-means-fresh (failover generation
+        bump drives the replica restart)."""
+        rep = self.replicas.get(node)
+        if rep is not None and self.supervisor.needs_restart(node,
+                                                            rep.generation):
+            del self.replicas[node]
+            return None
+        return rep
+
+    def _replica_for(self, node: int) -> Replica:
+        rep = self._live_replica(node)
+        if rep is None:
+            rep = Replica(self.model, slots=self.slots, max_len=self.max_len,
+                          generation=self.supervisor.stamp())
+            rep.attach_params(self.params)
+            self.replicas[node] = rep
+        return rep
+
+    def _has_capacity(self, node: int) -> bool:
+        rep = self._live_replica(node)
+        return self.slots > 0 if rep is None else rep.num_free > 0
+
+    def _session_resident(self, rec: "SessionRecord") -> bool:
+        """Does the session's slot actually exist on its recorded owner?
+        False for stranded sessions (owner died with the slab) — even if
+        the same node id later re-enters the ring with a fresh replica."""
+        rep = self._live_replica(rec.owner)
+        return rep is not None and rec.session_id in rep.sessions
+
+    # -- request intake --------------------------------------------------------
+    def submit(self, req: Request, *, via: Optional[int] = None) -> int:
+        """Admit a session and return its first generated token.
+
+        ``via`` is the node the request physically arrived at.  A
+        quarantined ``via`` node acts as a §V gateway: it forwards to the
+        key's owner without ever owning the session (it is masked out of
+        the active view, so the lookup can never pick it)."""
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            # guarantees any mid-stream transcript (prompt + generated,
+            # at most prompt + max_new - 1 tokens) re-prefills into a
+            # successor's cache on migration
+            raise ValueError("prompt + max_new_tokens exceeds max_len")
+        if via is not None and self.state.is_quarantined(via):
+            self.proxied[via] = self.proxied.get(via, 0) + 1
+        key = session_key(req.session_id)
+        # host-side owner-first successor list (no device dispatch for a
+        # single key); admission spills down the replica_set exactly like
+        # migration does, so a hot arc fills its group before rejecting
+        group = [int(p) for p in self.state.replica_set(key,
+                                                        self.replication)]
+        owner = next((n for n in group if self._has_capacity(n)), None)
+        if owner is None:
+            raise RuntimeError(
+                f"no capacity in the {len(group)}-way replica set for "
+                f"session {req.session_id}")
+        rec = SessionRecord(req.session_id, key, np.asarray(req.prompt,
+                                                            np.int32),
+                            req.max_new_tokens, owner=owner)
+        tok = self._replica_for(owner).admit(req)
+        self.sessions[req.session_id] = rec
+        self._push_token(rec, tok)
+        return tok
+
+    def _push_token(self, rec: SessionRecord, tok: int) -> None:
+        rec.generated.append(tok)
+        if len(rec.generated) >= rec.max_new_tokens:
+            rec.done = True
+            rep = self.replicas.get(rec.owner)
+            if rep is not None:
+                rep.evict(rec.session_id)
+
+    # -- decode loop -----------------------------------------------------------
+    def step(self) -> Dict[str, int]:
+        """One continuous-batching decode round across every replica."""
+        if self._seen_version != self.state.active_version:
+            self._migrate_affected()       # retry deferred re-homes
+        out: Dict[str, int] = {}
+        for node in list(self.replicas):
+            rep = self.replicas[node]
+            for sid, tok in rep.decode_round().items():
+                rec = self.sessions[sid]
+                self._push_token(rec, tok)
+                out[sid] = tok
+        return out
+
+    def run(self, max_rounds: int = 1024) -> int:
+        """Decode until every live session completes; returns rounds."""
+        rounds = 0
+        while any(not r.done for r in self.sessions.values()):
+            if rounds >= max_rounds:
+                raise RuntimeError("sessions did not complete")
+            self.step()
+            rounds += 1
+        return rounds
+
+    @property
+    def live_sessions(self) -> List[SessionRecord]:
+        return [r for r in self.sessions.values() if not r.done]
+
+    # -- churn handling --------------------------------------------------------
+    def _on_event(self, ev) -> None:
+        if ev.kind != "join":
+            # leave: the node's slab is gone with it; quarantine: the
+            # supervisor pinned its generation, so the slab could never
+            # be resumed anyway — reclaim it instead of hoarding KV
+            self.replicas.pop(ev.subject_id, None)
+        self._migrate_affected()
+
+    def _migrate_affected(self) -> int:
+        """Move exactly the sessions whose key range changed owners.
+
+        ``_seen_version`` only advances when the whole batch re-homed: a
+        session that finds its entire replica_set full stays flagged (the
+        skip check makes reprocessing idempotent) and is retried by the
+        next ``step``/event once capacity frees, instead of silently
+        pointing at a dead owner forever."""
+        target_version = self.state.active_version
+        diff = self.state.owner_diff(self._seen_version, target_version)
+        live = self.live_sessions
+        if not live:
+            self._seen_version = target_version
+            return 0
+        keys = np.fromiter((r.key for r in live), np.uint64, len(live))
+        hit = diff.affected(keys)
+        moved = 0
+        complete = True
+        for rec in (r for r, h in zip(live, hit) if h):
+            group = [int(p) for p in self.state.replica_set(
+                rec.key, self.replication)]
+            if group[0] == rec.owner and self._session_resident(rec):
+                continue    # still primary AND its slot is really there
+                # (a bare owner-id match is not enough: a stranded
+                # session's dead owner may have re-entered the ring with
+                # an empty slab)
+            try:
+                self._handoff(rec, group)
+                moved += 1
+            except RuntimeError:            # replica_set full right now
+                self.stranded += 1
+                complete = False
+        if complete:
+            self._seen_version = target_version
+        return moved
+
+    def _handoff(self, rec: SessionRecord, group: List[int]) -> None:
+        """Re-prefill the session's transcript on the first member of its
+        replica_set group with a free slot (capacity spill down the r-way
+        successor list); the admit's return value IS the next token.  The
+        new slot is filled BEFORE the old one is freed, so a failed admit
+        never strands a session half-migrated."""
+        resident = self._session_resident(rec)
+        new_owner = None
+        for n in group:
+            if n == rec.owner and resident:
+                return      # a group member already holds its live slot;
+                # moving it to a lower-priority member gains nothing
+            if self._has_capacity(n):
+                new_owner = n
+                break
+        if new_owner is None:
+            raise RuntimeError(
+                f"no capacity in the {len(group)}-way replica set for "
+                f"session {rec.session_id}")
+        tok = self._replica_for(new_owner).admit(
+            Request(rec.session_id, rec.transcript, rec.max_new_tokens))
+        if resident:                        # clean handoff: free the slot
+            self.replicas[rec.owner].evict(rec.session_id)
+        rec.owner = new_owner
+        rec.migrations += 1
+        self.migrated_sessions += 1
+        self._push_token(rec, tok)
+
+    # -- observability -----------------------------------------------------------
+    def stats(self) -> Dict[str, int]:
+        return {
+            "sessions": len(self.sessions),
+            "live": len(self.live_sessions),
+            "replicas": len(self.replicas),
+            "migrated": self.migrated_sessions,
+            "stranded": self.stranded,
+            "proxied": sum(self.proxied.values()),
+        }

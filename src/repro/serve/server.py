@@ -3,15 +3,22 @@
 Requests carry a session id; the D1HT ring (full routing table, single
 local lookup) decides which serving replica owns the session's KV cache.
 The Pallas ``ring_lookup`` kernel resolves whole request batches
-on-device.  Each replica runs continuous batched decode over its slots.
+on-device.  Each replica runs continuous batched decode over its slots:
+slot state lives in flat per-slot arrays and every active slot decodes at
+its OWN cache position in one jitted call (per-slot lengths flow through
+``decode_attention``'s masking), so mixed-length sessions never attend
+past their real length and a long session never gates short ones.
 
 Quarantined replicas (spot nodes inside T_q) take no sessions but may
-proxy requests — the paper's gateway mechanism (§V).
+proxy requests — the paper's gateway mechanism (§V); see
+``repro.serve.cluster.ServeCluster`` for the churn-aware orchestration
+(migration on leave/quarantine, generation-driven restarts).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from functools import lru_cache
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +27,7 @@ import numpy as np
 from repro.core.ring import hash_id
 from repro.core.ringstate import RingState
 from repro.models import Model
-from repro.runtime import Membership, Placement
+from repro.runtime import Membership
 
 
 @dataclass
@@ -42,14 +49,9 @@ class SessionRouter:
 
     def __init__(self, membership: Membership):
         self.membership = membership
+        # no event subscription needed: the device table refreshes
+        # lazily off the shared state's version
         self.state: RingState = membership.ring_state
-        self.events_observed = 0
-        membership.subscribe(self._on_event)
-
-    def _on_event(self, ev) -> None:
-        # The device table refreshes lazily via the state version; the
-        # subscription just tracks churn for observability.
-        self.events_observed += 1
 
     @property
     def uploads(self) -> int:
@@ -59,43 +61,79 @@ class SessionRouter:
 
     def route(self, session_ids: List[str]) -> List[int]:
         keys = np.fromiter(
-            (hash_id(f"session/{s}") for s in session_ids),
+            (session_key(s) for s in session_ids),
             np.uint64, len(session_ids))
         return [int(p) for p in self.state.lookup(keys)]
 
 
-class Replica:
-    """One serving replica: slab of decode slots + jitted prefill/decode."""
+def session_key(session_id: str) -> int:
+    """Ring key of a session (shared by router, placement and cluster)."""
+    return hash_id(f"session/{session_id}")
 
-    def __init__(self, model: Model, *, slots: int, max_len: int):
+
+@lru_cache(maxsize=32)
+def _jitted(model: Model) -> Tuple:
+    """One jitted (prefill, decode) pair per Model value, shared by every
+    replica of that model — a migrated-to replica reuses the donor's
+    compiled executables instead of re-tracing (Model is a frozen
+    dataclass, so value-equal models hit the same cache line)."""
+    return jax.jit(model.prefill), jax.jit(model.decode_step)
+
+
+class Replica:
+    """One serving replica: a vectorized slab of continuous-batching
+    decode slots.
+
+    Slot bookkeeping is flat per-slot arrays (``lengths``, ``tokens``,
+    ``active``) plus an O(1) free-list — no dict scans (the old admit
+    path re-scanned ``sessions.values()`` per admission: O(slots²)).
+    ``decode_round`` steps EVERY active slot at its own cache position in
+    a single jitted call: the (slots,) lengths array is the per-row cache
+    index, so each slot writes its fresh KV at its own length and masks
+    attention there (the old engine stepped everyone at ``lengths.max()``
+    and shorter sessions attended garbage).
+    """
+
+    def __init__(self, model: Model, *, slots: int, max_len: int,
+                 generation: int = 0):
         self.model = model
         self.slots = slots
         self.max_len = max_len
+        self.generation = generation     # membership generation at creation
         self.cache = model.init_cache(slots, max_len)
         self.lengths = np.zeros((slots,), np.int32)
-        self.sessions: Dict[str, int] = {}
         self.tokens = np.zeros((slots, 1), np.int32)
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
+        self.active = np.zeros((slots,), bool)
+        self.sessions: Dict[str, int] = {}
+        self._free = list(range(slots - 1, -1, -1))   # pop() -> slot 0 first
+        self._prefill, self._decode = _jitted(model)
 
-    def _slot_for(self, session_id: str) -> int:
-        if session_id in self.sessions:
-            return self.sessions[session_id]
-        free = [i for i in range(self.slots)
-                if i not in self.sessions.values()]
-        if not free:
-            raise RuntimeError("replica full")
-        self.sessions[session_id] = free[0]
-        return free[0]
+    @property
+    def num_active(self) -> int:
+        return len(self.sessions)
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
 
     def attach_params(self, params) -> None:
         self.params = params
 
     def admit(self, req: Request) -> int:
-        """Prefill a prompt into the session's slot (single-sequence batch
-        into a fresh slot-shaped cache, then written back slot-granular)."""
-        slot = self._slot_for(req.session_id)
+        """Prefill a prompt into a free slot (single-sequence batch into a
+        fresh slot-shaped cache, then written back slot-granular) and
+        return the first generated token."""
         s = len(req.prompt)
+        if s >= self.max_len:   # validate BEFORE allocating: a rejected
+            # admit must not leak the slot or leave a phantom session
+            raise ValueError(f"prompt of {s} tokens >= max_len {self.max_len}")
+        if req.session_id in self.sessions:
+            slot = self.sessions[req.session_id]
+        elif self._free:
+            slot = self._free.pop()
+            self.sessions[req.session_id] = slot
+        else:
+            raise RuntimeError("replica full")
         batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
         one = self.model.init_cache(1, self.max_len)
         logits, one = self._prefill(self.params, batch, one)
@@ -103,6 +141,7 @@ class Replica:
         self.lengths[slot] = s
         tok = int(jnp.argmax(logits[0]))
         self.tokens[slot, 0] = tok
+        self.active[slot] = True
         return tok
 
     def _write_slot(self, one_cache, slot: int) -> None:
@@ -111,20 +150,33 @@ class Replica:
         self.cache = jax.tree.map(wr, self.cache, one_cache)
 
     def decode_round(self) -> Dict[str, int]:
-        """One synchronized decode step for all active sessions."""
+        """One decode step for all active sessions — each at its own
+        cache position (the (slots,) lengths array IS the index).
+        Families without per-slot index support (SSM/hybrid/enc-dec)
+        fall back to lockstep at the max active length."""
         if not self.sessions:
             return {}
-        idx = int(self.lengths.max())
+        if self.model.supports_per_slot_decode:
+            index = jnp.asarray(self.lengths)
+        else:
+            index = jnp.asarray(int(self.lengths[self.active].max()),
+                                jnp.int32)
         logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.tokens),
-            jnp.asarray(idx, jnp.int32))
+            self.params, self.cache, jnp.asarray(self.tokens), index)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        out = {}
-        for sid, slot in self.sessions.items():
-            self.tokens[slot, 0] = nxt[slot]
-            self.lengths[slot] += 1
-            out[sid] = int(nxt[slot])
-        return out
+        act = self.active
+        self.tokens[act, 0] = nxt[act]
+        self.lengths[act] += 1
+        return {sid: int(nxt[slot]) for sid, slot in self.sessions.items()}
 
     def evict(self, session_id: str) -> None:
-        self.sessions.pop(session_id, None)
+        """Free the session's slot and zero its row — stale lengths used
+        to survive eviction and (under the old global-max decode index)
+        inflated every remaining session's decode position."""
+        slot = self.sessions.pop(session_id, None)
+        if slot is None:
+            return
+        self.active[slot] = False
+        self.lengths[slot] = 0
+        self.tokens[slot, 0] = 0
+        self._free.append(slot)

@@ -169,3 +169,116 @@ def test_facade_routingtable_shares_state():
     assert t.ids == [5, 25, 35]
     assert t.successor_of(30) == 35
     assert t.successor_of(RING_SIZE - 1) == 5  # wrap
+
+
+# ---------------------------------------------------------------------------
+# owner_diff: incremental ownership-change tracking
+# ---------------------------------------------------------------------------
+
+def _owners(state, keys):
+    return [state.successor_of(int(k)) for k in keys]
+
+
+def test_owner_diff_flags_exactly_the_changed_keys():
+    """For any single join/leave/quarantine batch, owner_diff's arcs must
+    flag a key iff its owner actually changed (oracle: re-resolve all)."""
+    state = RingState(_rand_ids(64))
+    state.track_owner_diffs()
+    keys = np.array(_rand_ids(512), np.uint64)
+    for step in range(30):
+        v0 = state.active_version
+        before = _owners(state, keys)
+        live = state.active_ids()
+        kind = int(RNG.integers(3))
+        if kind == 0:
+            state.apply_events(
+                [Event(subject_id=p, kind="join", seq=step)
+                 for p in _rand_ids(int(RNG.integers(1, 6)))])
+        elif kind == 1:
+            gone = [int(live[int(RNG.integers(live.size))])
+                    for _ in range(int(RNG.integers(1, 4)))]
+            state.apply_events(
+                [Event(subject_id=p, kind="leave", seq=step) for p in gone])
+        else:
+            state.set_quarantined(int(live[int(RNG.integers(live.size))]),
+                                  True)
+        after = _owners(state, keys)
+        changed = np.array([a != b for a, b in zip(before, after)])
+        diff = state.owner_diff(v0)
+        flagged = diff.affected(keys)
+        np.testing.assert_array_equal(flagged, changed)
+
+
+def test_owner_diff_accumulates_across_batches():
+    """A diff spanning several batches is a superset of the net change
+    (arcs may over-approximate when churn nets out A->B->A)."""
+    state = RingState(_rand_ids(32))
+    state.track_owner_diffs()
+    keys = np.array(_rand_ids(256), np.uint64)
+    v0 = state.active_version
+    before = _owners(state, keys)
+    for step in range(5):
+        state.apply_events(
+            [Event(subject_id=p, kind="join", seq=step)
+             for p in _rand_ids(3)])
+    victim = int(state.active_ids()[4])
+    state.remove(victim)
+    after = _owners(state, keys)
+    changed = np.array([a != b for a, b in zip(before, after)])
+    flagged = state.owner_diff(v0).affected(keys)
+    assert (flagged | ~changed).all()      # flagged is a superset
+
+
+def test_owner_diff_noop_batches_flag_nothing():
+    state = RingState(_rand_ids(16))
+    v0 = state.active_version
+    keys = np.array(_rand_ids(64), np.uint64)
+    diff = state.owner_diff(v0)
+    assert not diff.full and diff.arcs.size == 0
+    assert not diff.affected(keys).any()
+    # quarantine-only tracking of a NEW peer leaves ownership intact
+    state.add(_rand_ids(1)[0], quarantined=True)
+    assert not state.owner_diff(v0).affected(keys).any()
+
+
+def test_owner_diff_falls_back_to_full_when_history_evicted():
+    from repro.core.ringstate import _DIFF_HISTORY
+    state = RingState(_rand_ids(8))
+    state.track_owner_diffs()
+    v0 = state.active_version
+    for i, pid in enumerate(_rand_ids(_DIFF_HISTORY + 10)):
+        state.add(pid)
+    diff = state.owner_diff(v0)
+    assert diff.full
+    assert diff.affected(np.array(_rand_ids(5), np.uint64)).all()
+
+
+def test_owner_diff_untracked_mutations_answered_conservatively():
+    """Arc recording is opt-in (the EDRA hot path pays nothing without a
+    consumer): churn before the first owner_diff call yields a full diff,
+    and tracking is armed from that call onward."""
+    state = RingState(_rand_ids(16))
+    v0 = state.active_version
+    state.add(_rand_ids(1)[0])             # mutation before any consumer
+    assert state.owner_diff(v0).full       # conservative, never stale
+    v1 = state.active_version
+    state.add(_rand_ids(1)[0])             # now recorded
+    assert not state.owner_diff(v1).full
+
+
+def test_owner_diff_tiny_views_are_conservative():
+    state = RingState()
+    state.track_owner_diffs()
+    v0 = state.active_version
+    a, b = _rand_ids(2)
+    state.add(a)                           # 0 -> 1 peers: unbounded
+    assert state.owner_diff(v0).full
+    v1 = state.active_version
+    state.add(b)                           # 1 -> 2 peers: still unbounded
+    assert state.owner_diff(v1).full
+
+
+def test_owner_diff_rejects_reversed_versions():
+    state = RingState(_rand_ids(4))
+    with pytest.raises(ValueError):
+        state.owner_diff(state.active_version + 1, state.active_version)

@@ -104,3 +104,33 @@ def test_failover_save_restore_cycle(tmp_path):
     step, restored = f.restore_latest(state)
     assert step == 2
     np.testing.assert_array_equal(restored["w"], state["w"])
+
+
+def test_retune_window_anchored_to_construction():
+    """Regression: the event-rate window divided by the raw clock value,
+    so any monotonic clock with boot-relative epoch deflated r (and blew
+    up Theta) by orders of magnitude.  The window must be time since the
+    Membership view was constructed."""
+    uptime = 1_000_000.0                   # host has been up for ~12 days
+    t = [uptime]
+    m = Membership(now=lambda: t[0])
+    for i in range(8):
+        m.request_join(f"10.0.2.{i}", 7000 + i)
+    t[0] = uptime + 100.0
+    m.fail(m.members()[0])
+    # 9 events over 100 s of view lifetime
+    assert m.params.r == pytest.approx(9 / 100.0, rel=1e-6)
+
+
+def test_quarantine_member_masks_without_leave_event():
+    m, t = _mk(8)
+    nid = m.members()[3]
+    events_before = m._events_seen
+    seen = []
+    m.subscribe(lambda ev: seen.append(ev.kind))
+    assert m.quarantine_member(nid)
+    assert m._events_seen == events_before   # no EDRA dissemination
+    assert seen == ["quarantine"]            # but local listeners notified
+    assert nid not in m.members()            # masked out of ownership
+    assert m.ring_state.is_quarantined(nid)
+    assert not m.quarantine_member(nid)      # idempotent

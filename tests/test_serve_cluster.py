@@ -1,0 +1,518 @@
+"""Churn-aware serve plane: per-slot decode correctness, DES-driven
+session migration, quarantine gateway proxying, generation restarts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.dht.des import LanDelay, SimNet
+from repro.models import Model
+from repro.runtime import Membership, ReplicaSupervisor
+from repro.serve import Replica, Request, ServeCluster
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_smoke_config("qwen2.5-3b").with_overrides(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _membership(n, t):
+    m = Membership(t_q=60.0, now=lambda: t[0])
+    for i in range(n):
+        m.request_join(f"10.3.0.{i}", 7000 + i)
+    return m
+
+
+def _requests(cfg, count, *, max_new=10, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(f"s{i}",
+                    rng.integers(0, cfg.vocab, 4 + (i % 4) * 3,
+                                 dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i in range(count)]
+
+
+def _reference_tokens(model, params, prompt, steps, max_len):
+    """Reference model: one session alone, batch = 1, incremental decode."""
+    cache = model.init_cache(1, max_len)
+    logits, cache = jax.jit(model.prefill)(
+        params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]}, cache)
+    toks = [int(jnp.argmax(logits[0]))]
+    dec = jax.jit(model.decode_step)
+    length = len(prompt)
+    for _ in range(steps - 1):
+        logits, cache = dec(params, cache,
+                            jnp.asarray([[toks[-1]]], jnp.int32),
+                            jnp.asarray([length], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0])))
+        length += 1
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# vectorized slot engine
+# ---------------------------------------------------------------------------
+
+def test_replica_mixed_lengths_decode_at_own_positions(smoke_model):
+    """Slots with very different lengths must each decode at their OWN
+    cache position (the old engine stepped everyone at lengths.max() and
+    short sessions attended garbage)."""
+    cfg, model, params = smoke_model
+    rep = Replica(model, slots=4, max_len=48)
+    rep.attach_params(params)
+    rng = np.random.default_rng(3)
+    prompts = {f"m{i}": rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for i, n in enumerate((3, 9, 17, 26))}
+    got = {sid: [rep.admit(Request(sid, p))] for sid, p in prompts.items()}
+    for _ in range(7):
+        for sid, tok in rep.decode_round().items():
+            got[sid].append(tok)
+    for sid, p in prompts.items():
+        want = _reference_tokens(model, params, p, 8, 48)
+        assert got[sid] == want, f"{sid} diverged from reference model"
+
+
+def test_replica_evict_zeroes_slot_state_and_reuses_slot(smoke_model):
+    cfg, model, params = smoke_model
+    rep = Replica(model, slots=2, max_len=32)
+    rep.attach_params(params)
+    rng = np.random.default_rng(1)
+    rep.admit(Request("a", rng.integers(0, cfg.vocab, 20, dtype=np.int32)))
+    rep.admit(Request("b", rng.integers(0, cfg.vocab, 4, dtype=np.int32)))
+    slot_a = rep.sessions["a"]
+    rep.evict("a")
+    assert rep.lengths[slot_a] == 0 and rep.tokens[slot_a, 0] == 0
+    assert not rep.active[slot_a]
+    assert rep.num_free == 1
+    # freed slot is reusable and the survivor still matches the reference
+    rep.admit(Request("c", rng.integers(0, cfg.vocab, 5, dtype=np.int32)))
+    assert rep.num_active == 2
+    with pytest.raises(RuntimeError):
+        rep.admit(Request("d", rng.integers(0, cfg.vocab, 4, dtype=np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# churn-aware cluster (acceptance: kill a replica with >= 8 mixed-length
+# sessions mid-decode; zero losses, per-slot-correct positions, identical
+# next-token output on the replica_set successors)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_cluster_survives_replica_failure_mid_decode(smoke_model):
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(5, t)
+    cluster = ServeCluster(m, model, params, slots=16, max_len=64)
+    reqs = _requests(cfg, 12, max_new=10)
+    for r in reqs:
+        cluster.submit(r)
+
+    by_owner = {}
+    for rec in cluster.sessions.values():
+        by_owner.setdefault(rec.owner, []).append(rec)
+    victim = max(by_owner, key=lambda o: len(by_owner[o]))
+    assert len(by_owner[victim]) >= 8     # mixed-length victim load
+    lens = {len(r.prompt) for r in by_owner[victim]}
+    assert len(lens) > 1
+
+    # DES-driven churn schedule: the failure fires from the event heap
+    # while decode rounds are in flight.
+    net = SimNet(LanDelay(), seed=1)
+    net.schedule_at(3.0, lambda: m.fail(victim))
+    survivors_expected = {
+        rec.session_id: int(m.ring_state.replica_set(rec.key, 2)[1])
+        for rec in by_owner[victim]}
+    rounds = 0
+    while cluster.live_sessions:
+        net.run_until(net.now + 1.0)      # advance sim time, fire churn
+        cluster.step()
+        rounds += 1
+        assert rounds < 64
+
+    # zero losses: every session completed in full
+    assert all(len(r.generated) == 10 for r in cluster.sessions.values())
+    # exactly the victim's sessions migrated, to their replica_set
+    # successor at failure time
+    for rec in cluster.sessions.values():
+        if rec.session_id in survivors_expected:
+            assert rec.migrations >= 1
+            assert rec.owner == survivors_expected[rec.session_id]
+        else:
+            assert rec.migrations == 0
+    # identical next-token output vs the reference model, through the
+    # migration boundary (per-slot-correct decode positions)
+    for rec in cluster.sessions.values():
+        want = _reference_tokens(model, params, rec.prompt, 10, 64)
+        assert rec.generated == want, f"{rec.session_id} diverged"
+
+
+def test_cluster_join_migrates_only_the_new_arc(smoke_model):
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(6, t)
+    cluster = ServeCluster(m, model, params, slots=16, max_len=64)
+    for r in _requests(cfg, 10, max_new=8, seed=5):
+        cluster.submit(r)
+    before = {sid: rec.owner for sid, rec in cluster.sessions.items()}
+    nid = m.request_join("10.3.7.7", 7777)
+    for sid, rec in cluster.sessions.items():
+        if rec.migrations:
+            assert rec.owner == nid       # moved into the joiner's arc
+        else:
+            assert rec.owner == before[sid]
+    cluster.run()
+    for rec in cluster.sessions.values():
+        want = _reference_tokens(model, params, rec.prompt, 8, 64)
+        assert rec.generated == want
+
+
+# ---------------------------------------------------------------------------
+# quarantine gateways (paper §V)
+# ---------------------------------------------------------------------------
+
+def test_quarantined_node_proxies_but_never_owns(smoke_model):
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(4, t)
+    cluster = ServeCluster(m, model, params, slots=8, max_len=64)
+    gw = m.request_join("10.9.9.9", 9999, preemptible=True)
+    assert m.ring_state.is_quarantined(gw)
+
+    reqs = _requests(cfg, 4, max_new=6, seed=9)
+    for r in reqs:
+        cluster.submit(r, via=gw)         # request lands on the gateway
+    assert cluster.proxied[gw] == 4
+    assert gw not in cluster.replicas     # gateway owns no device slab
+    assert all(rec.owner != gw for rec in cluster.sessions.values())
+    cluster.run()
+    assert all(len(r.generated) == 6 for r in cluster.sessions.values())
+
+    # after T_q the gateway is admitted and takes over its arc
+    t[0] = 61.0
+    assert m.poll_quarantine() == [gw]
+    sid = next(f"n-{i}" for i in range(10_000)
+               if cluster.router.route([f"n-{i}"])[0] == gw)
+    rng = np.random.default_rng(11)
+    cluster.submit(Request(sid, rng.integers(0, cfg.vocab, 5,
+                                             dtype=np.int32), 4))
+    assert cluster.sessions[sid].owner == gw
+    cluster.run()
+
+
+def test_quarantine_member_drains_sessions_to_successor(smoke_model):
+    """An active member pushed back under the §V mask (straggler) keeps
+    its device slab but loses ownership: its sessions migrate out."""
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(5, t)
+    cluster = ServeCluster(m, model, params, slots=16, max_len=64)
+    for r in _requests(cfg, 10, max_new=8, seed=2):
+        cluster.submit(r)
+    by_owner = {}
+    for rec in cluster.sessions.values():
+        by_owner.setdefault(rec.owner, []).append(rec)
+    straggler = max(by_owner, key=lambda o: len(by_owner[o]))
+    assert m.quarantine_member(straggler)
+    assert all(rec.owner != straggler
+               for rec in cluster.sessions.values() if not rec.done)
+    cluster.run()
+    for rec in cluster.sessions.values():
+        want = _reference_tokens(model, params, rec.prompt, 8, 64)
+        assert rec.generated == want
+
+
+# ---------------------------------------------------------------------------
+# generation-driven replica restart
+# ---------------------------------------------------------------------------
+
+def test_rejoining_node_gets_fresh_replica(smoke_model):
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(4, t)
+    cluster = ServeCluster(m, model, params, slots=8, max_len=64)
+    for r in _requests(cfg, 8, max_new=4, seed=7):
+        cluster.submit(r)
+    owners = {rec.owner for rec in cluster.sessions.values()}
+    victim = next(iter(owners))
+    old_rep = cluster.replicas[victim]
+    info = m.nodes[victim]
+    m.fail(victim)
+    assert victim not in cluster.replicas
+    m.admit(victim, info.addr)            # same node id re-enters the ring
+    cluster.run()
+    for r in _requests(cfg, 6, max_new=3, seed=13):
+        cluster.submit(Request("re-" + r.session_id, r.prompt, 3))
+    if victim in cluster.replicas:
+        assert cluster.replicas[victim] is not old_rep
+        assert cluster.replicas[victim].generation > old_rep.generation
+    cluster.run()
+
+
+def test_replica_supervisor_generations():
+    t = [0.0]
+    m = _membership(4, t)
+    sup = ReplicaSupervisor(m)
+    g0 = sup.stamp()
+    nid = m.members()[0]
+    info = m.nodes[nid]
+    assert not sup.needs_restart(nid, g0)
+    m.fail(nid)
+    assert sup.needs_restart(nid, g0)     # state from before the crash
+    m.admit(nid, info.addr)
+    assert sup.needs_restart(nid, g0)
+    assert not sup.needs_restart(nid, sup.stamp())
+    other = m.members()[1]
+    assert not sup.needs_restart(other, g0)   # never left: state valid
+
+
+# ---------------------------------------------------------------------------
+# decode-attention backend threading
+# ---------------------------------------------------------------------------
+
+def test_serve_path_decode_kernel_threading(smoke_model):
+    """The decode_use_kernel flag threads from Model through the serve
+    decode path to the Pallas kernel.  Auto (None) engages the kernel
+    only where it compiles — on this (non-TPU) backend auto must keep
+    the faster jnp reference path — and pinning True must run the kernel
+    (interpret mode autodetected) with identical tokens."""
+    from unittest import mock
+
+    import repro.kernels.decode_attention.ops as dops
+    from repro.kernels.backend import default_interpret
+    from repro.kernels.decode_attention.kernel import BS
+
+    assert default_interpret() == (jax.default_backend() != "tpu")
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, n, dtype=np.int32)
+               for n in (3, 7)]
+
+    def run(mdl):
+        rep = Replica(mdl, slots=2, max_len=BS)
+        rep.attach_params(params)
+        got = {f"k{i}": [rep.admit(Request(f"k{i}", p))]
+               for i, p in enumerate(prompts)}
+        for _ in range(3):
+            for sid, tok in rep.decode_round().items():
+                got[sid].append(tok)
+        return got
+
+    calls = {"n": 0}
+    orig = dops.decode_attention_pallas
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return orig(*a, **k)
+
+    with mock.patch.object(dops, "decode_attention_pallas", spy):
+        auto = run(Model(cfg))
+        if default_interpret():                # non-TPU: auto stays on ref
+            assert calls["n"] == 0
+        else:                                  # TPU: auto compiles the kernel
+            assert calls["n"] > 0
+        with_kernel = run(Model(cfg, decode_use_kernel=True))
+        assert calls["n"] > 0
+    without = run(Model(cfg, decode_use_kernel=False))
+    assert auto == with_kernel == without
+
+
+# ---------------------------------------------------------------------------
+# review regressions: capacity spill, masked-member failure, slab reclaim,
+# lockstep fallback for non-transformer families
+# ---------------------------------------------------------------------------
+
+def test_migration_spills_down_the_replica_set_when_successor_full(
+        smoke_model):
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(3, t)
+    cluster = ServeCluster(m, model, params, slots=2, max_len=64,
+                           replication=2)
+    rng = np.random.default_rng(6)
+
+    def sid_owned_by(node, start):
+        return next(f"c{i}" for i in range(start, 100_000)
+                    if cluster.router.route([f"c{i}"])[0] == node)
+
+    nodes = sorted(m.members())
+    a = cluster.router.route(["c0"])[0]
+    # fill A with 2 sessions, and A's ring successor B with 2 of its own
+    b = int(m.ring_state.succ(a, 1))
+    i = 0
+    for node in (a, a, b, b):
+        sid = sid_owned_by(node, i)
+        i = int(sid[1:]) + 1
+        cluster.submit(Request(sid, rng.integers(0, cfg.vocab, 5,
+                                                 dtype=np.int32), 6))
+    assert cluster.replicas[b].num_free == 0
+    m.fail(a)                              # B (primary successor) is full
+    third = ({int(x) for x in m.members()} - {b})
+    for rec in cluster.sessions.values():
+        if rec.migrations:
+            assert rec.owner in third      # spilled to replica_set[1]
+    cluster.run()
+    assert all(len(r.generated) == 6 for r in cluster.sessions.values())
+    for rec in cluster.sessions.values():
+        want = _reference_tokens(model, params, rec.prompt, 6, 64)
+        assert rec.generated == want
+
+
+def test_fail_of_masked_member_disseminates_leave():
+    t = [0.0]
+    m = Membership(t_q=60.0, now=lambda: t[0])
+    for i in range(6):
+        m.request_join(f"10.4.0.{i}", 7000 + i)
+    nid = m.members()[2]
+    kinds = []
+    m.subscribe(lambda ev: kinds.append(ev.kind))
+    assert m.quarantine_member(nid)
+    events_after_mask = m._events_seen
+    m.fail(nid)                            # dead gateway must not linger
+    assert kinds == ["quarantine", "leave"]
+    assert m._events_seen == events_after_mask + 1
+    assert not m.ring_state.is_quarantined(nid)
+    assert nid not in m.ring_state.all_ids()
+    assert nid not in m.nodes
+
+
+def test_quarantine_member_reclaims_the_replica_slab(smoke_model):
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(5, t)
+    cluster = ServeCluster(m, model, params, slots=16, max_len=64)
+    for r in _requests(cfg, 10, max_new=8, seed=2):
+        cluster.submit(r)
+    owners = {rec.owner for rec in cluster.sessions.values()}
+    straggler = next(iter(owners))
+    assert straggler in cluster.replicas
+    m.quarantine_member(straggler)
+    assert straggler not in cluster.replicas   # slab reclaimed, not hoarded
+    cluster.run()
+
+
+@pytest.mark.slow
+def test_replica_lockstep_fallback_for_ssm_family():
+    """SSM/hybrid families take no per-slot index array; the replica must
+    fall back to the lockstep decode the old engine used."""
+    cfg = get_smoke_config("falcon-mamba-7b").with_overrides(dtype="float32")
+    model = Model(cfg)
+    assert not model.supports_per_slot_decode
+    params = model.init(jax.random.PRNGKey(0))
+    rep = Replica(model, slots=2, max_len=32)
+    rep.attach_params(params)
+    rng = np.random.default_rng(8)
+    rep.admit(Request("x", rng.integers(0, cfg.vocab, 6, dtype=np.int32)))
+    rep.admit(Request("y", rng.integers(0, cfg.vocab, 6, dtype=np.int32)))
+    for _ in range(3):
+        out = rep.decode_round()
+        assert set(out) == {"x", "y"}
+        assert all(0 <= v < cfg.vocab for v in out.values())
+
+
+def test_rejected_admit_leaks_no_slot(smoke_model):
+    cfg, model, params = smoke_model
+    rep = Replica(model, slots=2, max_len=16)
+    rep.attach_params(params)
+    rng = np.random.default_rng(5)
+    with pytest.raises(ValueError):
+        rep.admit(Request("too-long",
+                          rng.integers(0, cfg.vocab, 16, dtype=np.int32)))
+    assert rep.sessions == {} and rep.num_free == 2
+    assert rep.decode_round() == {}        # no phantom session decodes
+
+
+def test_stranded_sessions_rehome_when_capacity_frees(smoke_model):
+    """If every replica_set member is full at failure time, the affected
+    sessions stay flagged (not silently stranded on the dead owner) and
+    re-home on a later step once slots free up."""
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(2, t)                  # 2 nodes: replica_set = both
+    cluster = ServeCluster(m, model, params, slots=2, max_len=64,
+                           replication=2)
+    rng = np.random.default_rng(12)
+
+    def sid_owned_by(node, start):
+        return next(f"f{i}" for i in range(start, 100_000)
+                    if cluster.router.route([f"f{i}"])[0] == node)
+
+    a, b = cluster.router.route(["f0"])[0], None
+    b = next(n for n in m.members() if n != a)
+    i = 0
+    sids = []
+    for node, max_new in ((a, 8), (a, 8), (b, 2), (b, 2)):
+        sid = sid_owned_by(node, i)
+        i = int(sid[1:]) + 1
+        sids.append(sid)
+        cluster.submit(Request(sid, rng.integers(0, cfg.vocab, 5,
+                                                 dtype=np.int32), max_new))
+    m.fail(a)                              # b's 2 slots are occupied
+    assert cluster.stranded >= 2           # deferred, not crashed
+    a_sessions = [s for s in sids if cluster.sessions[s].owner == a]
+    assert a_sessions                      # still pointing at dead owner
+    cluster.run()                          # b's shorts finish -> re-home
+    for sid in sids:
+        rec = cluster.sessions[sid]
+        assert len(rec.generated) == rec.max_new_tokens
+        want = _reference_tokens(model, params, rec.prompt,
+                                 rec.max_new_tokens, 64)
+        assert rec.generated == want
+
+
+def test_preemptible_rejoin_of_active_member_notifies_and_fail_disseminates():
+    t = [0.0]
+    m = Membership(t_q=60.0, now=lambda: t[0])
+    for i in range(6):
+        m.request_join(f"10.5.0.{i}", 7000 + i)
+    nid = m.members()[1]
+    kinds = []
+    m.subscribe(lambda ev: kinds.append(ev.kind))
+    # active member restarts as a spot instance: must re-mask LOUDLY
+    addr = m.nodes[nid].addr
+    assert m.request_join(addr[0], addr[1], preemptible=True) == nid
+    assert kinds == ["quarantine"]
+    assert nid not in m.members()
+    # and its death must still disseminate a leave (its join did)
+    m.fail(nid)
+    assert kinds == ["quarantine", "leave"]
+    assert nid not in m.nodes and nid not in m.ring_state.all_ids()
+
+
+def test_stranded_session_rehomes_onto_its_rejoined_owner(smoke_model):
+    """If a stranded session's dead owner re-enters the ring (fresh,
+    empty slab), owner-id equality must not be mistaken for residency:
+    the session re-admits onto the rejoined node and completes."""
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(2, t)
+    cluster = ServeCluster(m, model, params, slots=2, max_len=64,
+                           replication=2)
+    rng = np.random.default_rng(14)
+
+    def sid_owned_by(node, start):
+        return next(f"r{i}" for i in range(start, 100_000)
+                    if cluster.router.route([f"r{i}"])[0] == node)
+
+    a = cluster.router.route(["r0"])[0]
+    b = next(n for n in m.members() if n != a)
+    i, sids = 0, []
+    for node in (a, b, b):                 # fill b; one session on a
+        sid = sid_owned_by(node, i)
+        i = int(sid[1:]) + 1
+        sids.append(sid)
+        cluster.submit(Request(sid, rng.integers(0, cfg.vocab, 5,
+                                                 dtype=np.int32), 8))
+    info = m.nodes[a]
+    m.fail(a)                              # b full -> a's session strands
+    assert cluster.stranded >= 1
+    m.admit(a, info.addr)                  # same node id rejoins, empty
+    cluster.run()                          # must re-admit, not skip
+    for sid in sids:
+        rec = cluster.sessions[sid]
+        assert len(rec.generated) == 8
+        want = _reference_tokens(model, params, rec.prompt, 8, 64)
+        assert rec.generated == want
