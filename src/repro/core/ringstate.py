@@ -27,6 +27,16 @@ Design points (DESIGN.md §2–§4):
     when capacity doubles, not on churn.  ``upload_count`` counts actual
     uploads — the serve-path acceptance tests assert it stays at 1 across
     unchanged-membership request batches.
+  * **Two-level bucket index** (DESIGN.md §7): above ``_BUCKET_MIN_N``
+    peers, lookups run through a radix-partitioned (B, BW) bucket table
+    — top-``R``-bits directory, one bounded row per query — so per-key
+    kernel work is O(BW), not O(n).  The directory is maintained
+    incrementally next to the sorted table; ``device_bucket_table()``
+    re-ships only the rows a membership batch dirtied (scatter update),
+    making device maintenance traffic O(touched buckets) per EDRA batch
+    instead of O(n).  Views the radix cannot partition (adversarially
+    clustered ids) fall back to the flat-scan kernel, which stays the
+    correctness oracle.
   * **Successor-list replicas** (Leslie, *Reliable Data Storage in
     Distributed Hash Tables*): ``replica_set(key, r)`` is the r-way
     successor-list view used for replicated placement.
@@ -48,6 +58,12 @@ _MIN_DEVICE_CAPACITY = 2048   # one kernel table tile (kernel.BT)
 _WORD = np.uint64(32)
 _LO_MASK = np.uint64(0xFFFFFFFF)
 _DIFF_HISTORY = 128           # retained ownership-diff batches
+
+# -- two-level bucket index (DESIGN.md §7) ----------------------------------
+_BUCKET_ROW = 128             # row width; must equal ring_lookup kernel.BW
+_BUCKET_TARGET = 32           # mean ids per bucket the directory aims for
+_BUCKET_MIN_N = 2048          # below this the flat scan wins (one BT tile)
+_MAX_R_BONUS = 2              # extra directory doublings before fallback
 
 
 @dataclass(frozen=True)
@@ -110,6 +126,23 @@ class RingState:
         self._dev_version = 0
         self._dev: Optional[tuple] = None
         self._dev_capacity = 0
+        # two-level bucket index (armed lazily by the first device lookup
+        # so pure-Python users never pay directory maintenance)
+        self._bkt_enabled = False
+        self._bkt_valid = False
+        self._bkt_cap = 0              # pow2 >= n driving the sizing
+        self._bkt_bits = 0             # R: directory has 2^R buckets
+        self._bkt_edges: Optional[np.ndarray] = None
+        self._bkt_occ: Optional[np.ndarray] = None     # (B,) int32
+        self._bkt_pad: Optional[np.ndarray] = None     # (B,) uint64
+        self._bkt_starts: Optional[np.ndarray] = None  # (B,) int64
+        self._bkt_dirty: Optional[np.ndarray] = None   # (B,) bool
+        self._bkt_dev: Optional[tuple] = None
+        self._bkt_dev_bits = -1
+        # upload accounting (flat + bucket paths; bench observability)
+        self.upload_bytes = 0
+        self.full_uploads = 0
+        self.delta_uploads = 0
         # ownership-diff log: (active_version, arcs|None) per mutation
         # batch that moved the active view; None marks an unbounded batch.
         # Recording is opt-in (track_owner_diffs / first owner_diff call)
@@ -280,12 +313,14 @@ class RingState:
             self._quar[i] = quarantined
             self._bump()
             self._record_arcs(old_act)
+            self._bucket_note([pid])
             return True
         self._insert_block(np.asarray([pid], np.uint64),
                            np.asarray([quarantined], bool))
         self._bump(active=not quarantined)
         if not quarantined:
             self._record_arcs(old_act)
+            self._bucket_note([pid])
         return not quarantined
 
     def remove(self, pid: int) -> bool:
@@ -301,6 +336,7 @@ class RingState:
         self._bump(active=was_active)
         if was_active:
             self._record_arcs(old_act)
+            self._bucket_note([pid])
         return True
 
     def set_quarantined(self, pid: int, flag: bool) -> bool:
@@ -314,6 +350,7 @@ class RingState:
         self._quar[i] = flag
         self._bump()
         self._record_arcs(old_act)
+        self._bucket_note([int(pid)])
         return True
 
     def apply_events(self, events: Sequence) -> int:
@@ -346,6 +383,7 @@ class RingState:
             self._bump(active=active_changed > 0)
             if active_changed:
                 self._record_arcs(old_act)
+                self._bucket_note(np.concatenate([joins, leaves]))
         return changed
 
     def _merge_block(self, new_ids: np.ndarray) -> int:
@@ -458,6 +496,182 @@ class RingState:
         x = key if isinstance(key, int) else key_id(key)
         return self.successor_of(x)
 
+    # -- two-level bucket index (DESIGN.md §7) ---------------------------------
+    @staticmethod
+    def _bits_for(cap: int) -> int:
+        """Directory size for a table capacity: 2^R buckets targeting
+        ``_BUCKET_TARGET`` ids each, clamped so the (B, BW) matrix fits
+        the backend's fast-memory budget."""
+        from repro.kernels.backend import bucket_budget_bytes
+        b = max(64, cap // _BUCKET_TARGET)
+        while b > 64 and b * _BUCKET_ROW * 8 > bucket_budget_bytes():
+            b //= 2
+        return b.bit_length() - 1
+
+    def _enable_buckets(self) -> None:
+        if self._bkt_enabled:
+            return
+        self._bkt_enabled = True
+        cap = max(self._bkt_cap, _MIN_DEVICE_CAPACITY)
+        while cap < len(self):
+            cap *= 2
+        self._bkt_cap = cap
+        self._set_bits(self._bits_for(cap))
+
+    def _set_bits(self, bits: int) -> None:
+        """(Re)size the directory; every row becomes dirty (the device
+        arrays change shape, so the next sync is a full rebuild — the
+        bucketized analogue of a capacity-doubling recompile)."""
+        nb = 1 << bits
+        self._bkt_bits = bits
+        self._bkt_edges = np.arange(nb, dtype=np.uint64) \
+            << np.uint64(64 - bits)
+        self._bkt_occ = np.full(nb, -1, np.int32)
+        self._bkt_pad = np.zeros(nb, np.uint64)
+        self._bkt_starts = np.zeros(nb, np.int64)
+        self._bkt_dirty = np.ones(nb, bool)
+        self._refresh_directory(None)
+
+    def _bucket_note(self, touched) -> None:
+        """Per mutation batch that moved the active view: grow/refresh
+        the directory and accumulate dirty rows.  No-op until the first
+        device lookup arms the index."""
+        if not self._bkt_enabled:
+            return
+        n = len(self)
+        if n > self._bkt_cap:
+            cap = self._bkt_cap
+            while cap < n:
+                cap *= 2
+            self._bkt_cap = cap
+            bits = self._bits_for(cap)
+            if bits != self._bkt_bits:
+                self._set_bits(bits)
+                return
+        self._refresh_directory(touched)
+
+    def _refresh_directory(self, touched) -> None:
+        """Vectorized O(B log n) directory recompute: per-bucket starts,
+        occupancy, and successor pad ids.  Dirty rows = rows whose
+        occupancy or pad changed, plus the rows of explicitly touched
+        ids (an id swap inside one bucket keeps occ AND pad constant but
+        still rewrites row content)."""
+        act = self.active_ids()
+        n = int(act.size)
+        if n == 0:
+            self._bkt_valid = False
+            self._bkt_dirty[:] = True
+            return
+        starts = np.searchsorted(act, self._bkt_edges).astype(np.int64)
+        ends = np.append(starts[1:], n)
+        occ = (ends - starts).astype(np.int32)
+        if int(occ.max()) >= _BUCKET_ROW:   # no slack slot left for pad
+            if self._escalate(act):
+                return
+            # clustering the radix cannot split (e.g. ids differing only
+            # in low bits past R): flat scan takes over until it clears
+            self._bkt_valid = False
+            self._bkt_dirty[:] = True
+            self._bkt_occ, self._bkt_starts = occ, starts
+            self._bkt_pad = act[ends % n]
+            return
+        pad = act[ends % n]
+        dirty = (occ != self._bkt_occ) | (pad != self._bkt_pad)
+        if touched is not None and len(touched):
+            rows = (np.asarray(touched, np.uint64)
+                    >> np.uint64(64 - self._bkt_bits)).astype(np.int64)
+            dirty[rows] = True
+        self._bkt_dirty |= dirty
+        self._bkt_occ, self._bkt_pad, self._bkt_starts = occ, pad, starts
+        self._bkt_valid = True
+
+    def _escalate(self, act: np.ndarray) -> bool:
+        """Overflowing bucket: try a finer radix (more directory bits)
+        within the memory budget before giving up on the index."""
+        from repro.kernels.backend import bucket_budget_bytes
+        bits = self._bkt_bits
+        max_bits = self._bits_for(self._bkt_cap) + _MAX_R_BONUS
+        while bits < max_bits:
+            bits += 1
+            if (1 << bits) * _BUCKET_ROW * 8 > bucket_budget_bytes():
+                return False
+            edges = np.arange(1 << bits, dtype=np.uint64) \
+                << np.uint64(64 - bits)
+            occ = np.diff(np.append(np.searchsorted(act, edges), act.size))
+            if int(occ.max()) < _BUCKET_ROW:
+                self._set_bits(bits)
+                return True
+        return False
+
+    def _build_rows(self, rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(hi, lo) uint32 row blocks for the given bucket indices: live
+        entries first, successor pad id in every slack slot."""
+        act = self.active_ids()
+        starts = self._bkt_starts[rows]
+        occ = self._bkt_occ[rows].astype(np.int64)
+        pad = self._bkt_pad[rows]
+        j = np.arange(_BUCKET_ROW, dtype=np.int64)[None, :]
+        idx = np.minimum(starts[:, None] + j, act.size - 1)
+        vals = np.where(j < occ[:, None], act[idx], pad[:, None])
+        return ((vals >> _WORD).astype(np.uint32),
+                (vals & _LO_MASK).astype(np.uint32))
+
+    def device_bucket_table(self):
+        """(bkt_hi, bkt_lo, occ) jnp arrays for the bucketized kernel,
+        or None while the radix cannot represent the view (empty table /
+        unsplittable clustering) — callers fall back to the flat scan.
+
+        Delta protocol: after the first full materialization, a sync
+        ships ONLY the rows membership batches dirtied since the last
+        sync, as one scatter-update per array — device maintenance
+        traffic is O(touched buckets) per EDRA batch, never O(n)."""
+        self._enable_buckets()
+        if not self._bkt_valid:
+            return None
+        if self._bkt_dev is not None and self._bkt_dev_bits == self._bkt_bits \
+                and not self._bkt_dirty.any():
+            return self._bkt_dev
+        import jax.numpy as jnp  # lazy: keep pure-python users jax-free
+
+        nb = 1 << self._bkt_bits
+        if self._bkt_dev is None or self._bkt_dev_bits != self._bkt_bits:
+            hi, lo = self._build_rows(np.arange(nb))
+            self._bkt_dev = (jnp.asarray(hi), jnp.asarray(lo),
+                             jnp.asarray(self._bkt_occ))
+            self._bkt_dev_bits = self._bkt_bits
+            self.full_uploads += 1
+            self.upload_bytes += nb * (_BUCKET_ROW * 8 + 4)
+        else:
+            rows = np.nonzero(self._bkt_dirty)[0]
+            hi, lo = self._build_rows(rows)
+            bhi, blo, occ = self._bkt_dev
+            at = jnp.asarray(rows.astype(np.int32))
+            self._bkt_dev = (bhi.at[at].set(jnp.asarray(hi)),
+                             blo.at[at].set(jnp.asarray(lo)),
+                             occ.at[at].set(jnp.asarray(self._bkt_occ[rows])))
+            self.delta_uploads += 1
+            self.upload_bytes += int(rows.size) * (_BUCKET_ROW * 8 + 4)
+        self.upload_count += 1
+        self._bkt_dirty[:] = False
+        return self._bkt_dev
+
+    def bucket_stats(self) -> dict:
+        """Observability for the two-level index (bench + tests)."""
+        if not self._bkt_enabled or self._bkt_occ is None:
+            return {"enabled": False}
+        occ = self._bkt_occ
+        nb = 1 << self._bkt_bits
+        return {
+            "enabled": True,
+            "valid": bool(self._bkt_valid),
+            "buckets": nb,
+            "row_width": _BUCKET_ROW,
+            "max_occupancy": int(occ.max()) if occ.size else 0,
+            "mean_occupancy": float(occ.mean()) if occ.size else 0.0,
+            "directory_bytes": nb * 4,
+            "matrix_bytes": nb * _BUCKET_ROW * 8,
+        }
+
     # -- device-resident table -------------------------------------------------
     @property
     def device_capacity(self) -> int:
@@ -490,24 +704,44 @@ class RingState:
         self._dev_capacity = cap
         self._dev_version = self.active_version
         self.upload_count += 1
+        self.full_uploads += 1             # the flat table has no delta
+        self.upload_bytes += cap * 8 + 4   # path: every sync re-ships it
         return self._dev
 
     def lookup(self, keys: np.ndarray, *, use_pallas: bool = True,
-               interpret: Optional[bool] = None) -> np.ndarray:
+               interpret: Optional[bool] = None,
+               use_buckets: Optional[bool] = None) -> np.ndarray:
         """Batched on-device successor lookup: (Q,) uint64 key IDs ->
-        (Q,) uint64 owner peer IDs, via the two-word Pallas kernel.
-        ``interpret=None`` (default) autodetects the backend: compiled on
-        real TPUs, interpreter mode elsewhere."""
+        (Q,) uint64 owner peer IDs.
+
+        Dispatch (DESIGN.md §7): tables of ``_BUCKET_MIN_N`` peers or
+        more resolve through the two-level bucket index (O(row) per
+        key); smaller tables — and views the radix cannot partition —
+        use the flat compare-and-count scan.  ``use_buckets`` pins the
+        preference (True still falls back when the index is invalid);
+        ``interpret=None`` autodetects the backend: compiled on real
+        TPUs, interpreter mode elsewhere."""
         import jax.numpy as jnp
-        from repro.kernels.ring_lookup.ops import ring_lookup64
 
         act = self.active_ids()
         if not act.size:
             raise LookupError("empty routing table")
         keys = np.asarray(keys, np.uint64)
-        thi, tlo, n = self.device_table()
         khi = jnp.asarray((keys >> _WORD).astype(np.uint32))
         klo = jnp.asarray((keys & _LO_MASK).astype(np.uint32))
+        if use_buckets is None:
+            use_buckets = act.size >= _BUCKET_MIN_N
+        if use_buckets:
+            dev = self.device_bucket_table()
+            if dev is not None:
+                from repro.kernels.ring_lookup.ops import ring_lookup_bucketed
+                ohi, olo = ring_lookup_bucketed(khi, klo, *dev,
+                                                use_pallas=use_pallas,
+                                                interpret=interpret)
+                return (np.asarray(ohi).astype(np.uint64) << _WORD) \
+                    | np.asarray(olo).astype(np.uint64)
+        from repro.kernels.ring_lookup.ops import ring_lookup64
+        thi, tlo, n = self.device_table()
         idx = np.asarray(ring_lookup64(khi, klo, thi, tlo, n,
                                        use_pallas=use_pallas,
                                        interpret=interpret))

@@ -22,3 +22,18 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret) -> bool:
     """``None`` -> autodetect; an explicit bool wins."""
     return default_interpret() if interpret is None else bool(interpret)
+
+
+@lru_cache(maxsize=1)
+def bucket_budget_bytes() -> int:
+    """Upper bound on the bucketized ring-lookup table (DESIGN.md §7).
+
+    The bucketized kernel gathers per-query rows from a table resident
+    on the accelerator, so its footprint must respect the device's fast
+    memory: on TPU the matrix competes for VMEM (one core has ~16 MiB —
+    leave headroom for the query blocks and outputs), while interpreted
+    backends (CPU tests, CI) only burn host RAM.  RingState stops
+    escalating the directory — and falls back to the flat-scan kernel —
+    once the matrix would outgrow this budget.
+    """
+    return 8 << 20 if not default_interpret() else 256 << 20

@@ -46,6 +46,10 @@ def ring_lookup_pallas(keys: jax.Array, table: jax.Array, *,
                        interpret: bool = True) -> jax.Array:
     """keys: (Q,) uint32; table: (N,) sorted uint32 -> (Q,) int32."""
     q, n = keys.shape[0], table.shape[0]
+    if n == 0:
+        # mirror RingState.lookup's contract instead of surfacing the
+        # mod-by-zero from the counts[:q] % n wraparound below
+        raise LookupError("empty routing table")
     qp = (q + BQ - 1) // BQ * BQ
     np_ = (n + BT - 1) // BT * BT
     keys_p = jnp.pad(keys, (0, qp - q))
@@ -132,3 +136,102 @@ def ring_lookup64_pallas(keys_hi: jax.Array, keys_lo: jax.Array,
         interpret=interpret,
     )(n.astype(jnp.int32), keys_hi, keys_lo, table_hi, table_lo)
     return (counts[:q] % n[0]).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Two-level bucketized lookup (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+#
+# The flat kernels above compare every query against every table tile:
+# O(N) per key, which collapses at million-peer scale.  The bucketized
+# kernel bounds each query to ONE row of a radix-partitioned table:
+#
+#   bucket(id) = top R bits of the 64-bit id  (R = log2(rows))
+#   rows (B, BW): row b holds the sorted active ids whose top bits are b
+#                 in its first occ[b] slots; every slot >= occ[b] holds
+#                 the bucket's SUCCESSOR id (the first active id past the
+#                 bucket's range, wrapping to the ring origin), so
+#
+#   owner(q) = row[bucket(q)][ #\{j < occ : row[j] < q\} ]
+#
+# with no branch: an in-bucket successor lands on a live slot, an
+# overshoot (q greater than everything in its bucket) lands on the
+# successor padding.  occ must stay < BW (one pad slot reserved) —
+# RingState falls back to the flat kernel when a bucket overflows.
+#
+# The kernel returns owner IDENTITIES (hi, lo), not global indices:
+# ranks would need a prefix-sum directory whose entries all shift on any
+# churn, while identities keep the device update O(touched buckets).
+
+BW = 128           # bucket row width (one VPU lane row of uint32)
+
+
+def _ring_lookup_bucketed_kernel(qhi_ref, qlo_ref, bhi_ref, blo_ref,
+                                 occ_ref, ohi_ref, olo_ref, *, shift: int):
+    """Per query block: one row gather + one (BQ, BW) compare-and-count.
+
+    The row gather is the paged-attention access pattern (per-query row
+    indices into a table resident outside the block): in interpret mode
+    it is a numpy take; on TPU it lowers to a VMEM gather, so the
+    dispatch layer only selects this kernel while the bucket matrix fits
+    the device budget (repro.kernels.backend.bucket_budget_bytes).
+    """
+    qhi = qhi_ref[...]                               # (BQ,) uint32
+    qlo = qlo_ref[...]
+    b = jax.lax.shift_right_logical(
+        qhi, jnp.uint32(shift)).astype(jnp.int32) if shift < 32 \
+        else jnp.zeros_like(qhi, jnp.int32)
+    rhi = jnp.take(bhi_ref[...], b, axis=0)          # (BQ, BW)
+    rlo = jnp.take(blo_ref[...], b, axis=0)
+    occ = jnp.take(occ_ref[...], b)                  # (BQ,)
+    j = jax.lax.broadcasted_iota(jnp.int32, rhi.shape, 1)
+    lt = (rhi < qhi[:, None]) | (
+        (rhi == qhi[:, None]) & (rlo < qlo[:, None]))
+    cnt = jnp.sum((lt & (j < occ[:, None])).astype(jnp.int32), axis=1)
+    ohi_ref[...] = jnp.take_along_axis(rhi, cnt[:, None], axis=1)[:, 0]
+    olo_ref[...] = jnp.take_along_axis(rlo, cnt[:, None], axis=1)[:, 0]
+
+
+def ring_lookup_bucketed_pallas(keys_hi: jax.Array, keys_lo: jax.Array,
+                                bkt_hi: jax.Array, bkt_lo: jax.Array,
+                                occ: jax.Array, *,
+                                interpret: bool = True):
+    """Bucketized 64-bit successor lookup: O(BW) work per key.
+
+    keys_hi/keys_lo: (Q,) uint32 query word pairs; bkt_hi/bkt_lo:
+    (B, BW) uint32 bucket rows (B a power of two — the radix directory);
+    occ: (B,) int32 live occupancy per row (< BW; the slack slots carry
+    the bucket successor id).  Occupancy and row contents travel as
+    data, so churn re-specializes nothing — only a directory resize
+    (capacity doubling) changes the shapes.  Returns ((Q,) hi, (Q,) lo)
+    owner id words.
+    """
+    q = keys_hi.shape[0]
+    nb = bkt_hi.shape[0]
+    r = nb.bit_length() - 1
+    if nb != 1 << r:
+        raise ValueError(f"bucket count {nb} is not a power of two")
+    qp = (q + BQ - 1) // BQ * BQ
+    keys_hi = jnp.pad(keys_hi, (0, qp - q))
+    keys_lo = jnp.pad(keys_lo, (0, qp - q))
+    out_hi, out_lo = pl.pallas_call(
+        functools.partial(_ring_lookup_bucketed_kernel, shift=32 - r),
+        grid=(qp // BQ,),
+        in_specs=[
+            pl.BlockSpec((BQ,), lambda qi: (qi,)),
+            pl.BlockSpec((BQ,), lambda qi: (qi,)),
+            pl.BlockSpec((nb, BW), lambda qi: (0, 0)),
+            pl.BlockSpec((nb, BW), lambda qi: (0, 0)),
+            pl.BlockSpec((nb,), lambda qi: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BQ,), lambda qi: (qi,)),
+            pl.BlockSpec((BQ,), lambda qi: (qi,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qp,), jnp.uint32),
+            jax.ShapeDtypeStruct((qp,), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(keys_hi, keys_lo, bkt_hi, bkt_lo, occ)
+    return out_hi[:q], out_lo[:q]

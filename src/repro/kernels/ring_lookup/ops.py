@@ -8,8 +8,10 @@ import jax
 import jax.numpy as jnp
 
 from ..backend import resolve_interpret
-from .kernel import ring_lookup64_pallas, ring_lookup_pallas
-from .ref import ring_lookup64_ref, ring_lookup_ref
+from .kernel import (ring_lookup64_pallas, ring_lookup_bucketed_pallas,
+                     ring_lookup_pallas)
+from .ref import (ring_lookup64_ref, ring_lookup_bucketed_ref,
+                  ring_lookup_ref)
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
@@ -45,3 +47,25 @@ def ring_lookup64(keys_hi: jax.Array, keys_lo: jax.Array,
         return ring_lookup64_pallas(keys_hi, keys_lo, table_hi, table_lo, n,
                                     interpret=resolve_interpret(interpret))
     return ring_lookup64_ref(keys_hi, keys_lo, table_hi, table_lo, n)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def ring_lookup_bucketed(keys_hi: jax.Array, keys_lo: jax.Array,
+                         bkt_hi: jax.Array, bkt_lo: jax.Array,
+                         occ: jax.Array, *,
+                         use_pallas: bool = True,
+                         interpret: Optional[bool] = None):
+    """Two-level successor lookup: O(bucket-row) work per key.
+
+    The (B, BW) bucket table and (B,) occupancy travel as data — churn
+    changes only values, so the jit cache key is the directory size B
+    and the kernel re-specializes only when the directory resizes (a
+    capacity-doubling event), never on membership events.  Returns the
+    owner id word pair ((Q,) hi, (Q,) lo) — identities, not ranks, so a
+    membership batch only has to rewrite its touched rows.
+    """
+    if use_pallas:
+        return ring_lookup_bucketed_pallas(
+            keys_hi, keys_lo, bkt_hi, bkt_lo, occ,
+            interpret=resolve_interpret(interpret))
+    return ring_lookup_bucketed_ref(keys_hi, keys_lo, bkt_hi, bkt_lo, occ)

@@ -36,3 +36,31 @@ def ring_lookup64_ref(keys_hi: jnp.ndarray, keys_lo: jnp.ndarray,
 
     counts = jax.vmap(count)(keys_hi, keys_lo)
     return (counts % n[0]).astype(jnp.int32)
+
+
+def ring_lookup_bucketed_ref(keys_hi: jnp.ndarray, keys_lo: jnp.ndarray,
+                             bkt_hi: jnp.ndarray, bkt_lo: jnp.ndarray,
+                             occ: jnp.ndarray):
+    """Oracle for the bucketized kernel (same math, plain jnp).
+
+    Row b of the (B, BW) bucket table holds the sorted active ids with
+    top bits b in its first occ[b] slots and the bucket's successor id
+    everywhere after, so ``row[count_of_smaller]`` IS the owner — both
+    for in-bucket successors and for overshoot past the bucket's last
+    entry.  Returns ((Q,) hi, (Q,) lo) owner id words.
+    """
+    nb, bw = bkt_hi.shape
+    shift = 32 - (nb.bit_length() - 1)
+    b = (jax.lax.shift_right_logical(keys_hi, jnp.uint32(shift))
+         .astype(jnp.int32)) if shift < 32 else jnp.zeros_like(
+        keys_hi, jnp.int32)
+    rhi = jnp.take(bkt_hi, b, axis=0)                # (Q, BW)
+    rlo = jnp.take(bkt_lo, b, axis=0)
+    robo = jnp.take(occ, b)                          # (Q,)
+    j = jnp.arange(bw, dtype=jnp.int32)[None, :]
+    lt = (rhi < keys_hi[:, None]) | (
+        (rhi == keys_hi[:, None]) & (rlo < keys_lo[:, None]))
+    cnt = jnp.sum((lt & (j < robo[:, None])).astype(jnp.int32), axis=1)
+    ohi = jnp.take_along_axis(rhi, cnt[:, None], axis=1)[:, 0]
+    olo = jnp.take_along_axis(rlo, cnt[:, None], axis=1)[:, 0]
+    return ohi, olo

@@ -271,6 +271,11 @@ class ServeCluster:
 
     # -- observability -----------------------------------------------------------
     def stats(self) -> Dict[str, int]:
+        """Serve-plane counters plus the routing plane's device-traffic
+        accounting: the router resolves through ``RingState.lookup``
+        (two-level bucket index at scale, flat scan below it — §7), so
+        ``route_upload_bytes`` IS the maintenance traffic this cluster's
+        membership churn has cost the device so far."""
         return {
             "sessions": len(self.sessions),
             "live": len(self.live_sessions),
@@ -278,4 +283,7 @@ class ServeCluster:
             "migrated": self.migrated_sessions,
             "stranded": self.stranded,
             "proxied": sum(self.proxied.values()),
+            "route_uploads": self.state.upload_count,
+            "route_upload_bytes": self.state.upload_bytes,
+            "route_delta_uploads": self.state.delta_uploads,
         }

@@ -71,13 +71,58 @@ def session_key(session_id: str) -> int:
     return hash_id(f"session/{session_id}")
 
 
+def _decode_bucket(active: int, slots: int) -> int:
+    """Pad an active-slot count to the next power of two (capped at the
+    slot count): decode batches only ever take log2(slots)+1 distinct
+    shapes, so churn in the number of live sessions can never trigger a
+    fresh trace per count."""
+    b = 1
+    while b < active:
+        b *= 2
+    return min(b, slots)
+
+
 @lru_cache(maxsize=32)
 def _jitted(model: Model) -> Tuple:
-    """One jitted (prefill, decode) pair per Model value, shared by every
-    replica of that model — a migrated-to replica reuses the donor's
-    compiled executables instead of re-tracing (Model is a frozen
-    dataclass, so value-equal models hit the same cache line)."""
-    return jax.jit(model.prefill), jax.jit(model.decode_step)
+    """One jitted (prefill, decode_slots) pair per Model value, shared by
+    every replica of that model — a migrated-to replica reuses the
+    donor's compiled executables instead of re-tracing (Model is a
+    frozen dataclass, so value-equal models hit the same cache line).
+
+    ``decode_slots`` is the bucketized decode round: it gathers the
+    (padded) active-slot rows out of the full slab, steps ONLY those
+    rows through the model, and scatters the fresh KV back — so round
+    cost scales with the active bucket, not the slab width, and the
+    out-of-range padding index is dropped on the way back (padded rows
+    never corrupt the slab).  ``decode_full`` is the full-house variant
+    (bucket == slab width): the gather would be the identity, so it
+    steps the slab in place and skips the scatter copy."""
+    prefill = jax.jit(model.prefill)
+
+    def _index(lengths):
+        # per-slot cache positions for transformer families; lockstep
+        # max-length for the rest (inactive/padding rows are length 0,
+        # so they never raise the lockstep position)
+        return lengths if model.supports_per_slot_decode \
+            else jnp.max(lengths)
+
+    @jax.jit
+    def decode_full(params, cache, tokens, lengths):
+        return model.decode_step(params, cache, tokens, _index(lengths))
+
+    @jax.jit
+    def decode_slots(params, cache, tokens, lengths, idx):
+        sub = jax.tree.map(
+            lambda c: jnp.take(c, idx, axis=1, mode="fill", fill_value=0),
+            cache)
+        tok = jnp.take(tokens, idx, axis=0, mode="fill", fill_value=0)
+        ln = jnp.take(lengths, idx, axis=0, mode="fill", fill_value=0)
+        logits, new_sub = model.decode_step(params, sub, tok, _index(ln))
+        out_cache = jax.tree.map(
+            lambda c, s: c.at[:, idx].set(s, mode="drop"), cache, new_sub)
+        return logits, out_cache
+
+    return prefill, decode_full, decode_slots
 
 
 class Replica:
@@ -87,11 +132,13 @@ class Replica:
     Slot bookkeeping is flat per-slot arrays (``lengths``, ``tokens``,
     ``active``) plus an O(1) free-list — no dict scans (the old admit
     path re-scanned ``sessions.values()`` per admission: O(slots²)).
-    ``decode_round`` steps EVERY active slot at its own cache position in
-    a single jitted call: the (slots,) lengths array is the per-row cache
-    index, so each slot writes its fresh KV at its own length and masks
-    attention there (the old engine stepped everyone at ``lengths.max()``
-    and shorter sessions attended garbage).
+    ``decode_round`` compacts the active slots into a power-of-two
+    bucketized batch and steps only those rows in a single jitted call,
+    each at its own cache position (the gathered lengths are the
+    per-row cache index, so each slot writes its fresh KV at its own
+    length and masks attention there).  The old engine stepped the full
+    slab every round — a single straggler session cost as much as a
+    full house — and each distinct decode shape risked a fresh trace.
     """
 
     def __init__(self, model: Model, *, slots: int, max_len: int,
@@ -106,7 +153,7 @@ class Replica:
         self.active = np.zeros((slots,), bool)
         self.sessions: Dict[str, int] = {}
         self._free = list(range(slots - 1, -1, -1))   # pop() -> slot 0 first
-        self._prefill, self._decode = _jitted(model)
+        self._prefill, self._decode_full, self._decode_slots = _jitted(model)
 
     @property
     def num_active(self) -> int:
@@ -151,23 +198,39 @@ class Replica:
 
     def decode_round(self) -> Dict[str, int]:
         """One decode step for all active sessions — each at its own
-        cache position (the (slots,) lengths array IS the index).
-        Families without per-slot index support (SSM/hybrid/enc-dec)
-        fall back to lockstep at the max active length."""
+        cache position.  The active slots are compacted into a batch
+        padded to a power-of-two bucket (see ``_decode_bucket``): decode
+        work scales with the live session count, and the jit only ever
+        sees log2(slots)+1 batch shapes, so admitting or evicting a
+        session never costs a recompile.  Padding rows carry an
+        out-of-range index: gathers fill them with zeros and the KV
+        scatter drops them."""
         if not self.sessions:
             return {}
-        if self.model.supports_per_slot_decode:
-            index = jnp.asarray(self.lengths)
+        act_idx = np.nonzero(self.active)[0].astype(np.int32)
+        bucket = _decode_bucket(act_idx.size, self.slots)
+        if bucket == self.slots:
+            # full house: the gather would be the identity permutation —
+            # step the slab directly and skip the scatter-back copy
+            # (inactive rows decode garbage at position 0, as the slab
+            # engine always did; admit rewrites the whole slot anyway)
+            logits, self.cache = self._decode_full(
+                self.params, self.cache, jnp.asarray(self.tokens),
+                jnp.asarray(self.lengths))
+            rows = act_idx
         else:
-            index = jnp.asarray(int(self.lengths[self.active].max()),
-                                jnp.int32)
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.tokens), index)
+            idx = np.full(bucket, self.slots, np.int32)  # slots = OOB pad
+            idx[:act_idx.size] = act_idx
+            logits, self.cache = self._decode_slots(
+                self.params, self.cache, jnp.asarray(self.tokens),
+                jnp.asarray(self.lengths), jnp.asarray(idx))
+            rows = np.arange(act_idx.size)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        act = self.active
-        self.tokens[act, 0] = nxt[act]
-        self.lengths[act] += 1
-        return {sid: int(nxt[slot]) for sid, slot in self.sessions.items()}
+        row_of = {int(s): int(r) for s, r in zip(act_idx, rows)}
+        self.tokens[act_idx, 0] = nxt[rows]
+        self.lengths[act_idx] += 1
+        return {sid: int(nxt[row_of[slot]])
+                for sid, slot in self.sessions.items()}
 
     def evict(self, session_id: str) -> None:
         """Free the session's slot and zero its row — stale lengths used

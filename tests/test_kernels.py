@@ -9,8 +9,12 @@ from repro.kernels.decode_attention.ops import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.ring_lookup.ops import ring_lookup, ring_lookup64
-from repro.kernels.ring_lookup.ref import ring_lookup64_ref, ring_lookup_ref
+from repro.kernels.ring_lookup.kernel import BW
+from repro.kernels.ring_lookup.ops import (ring_lookup, ring_lookup64,
+                                           ring_lookup_bucketed)
+from repro.kernels.ring_lookup.ref import (ring_lookup64_ref,
+                                           ring_lookup_bucketed_ref,
+                                           ring_lookup_ref)
 from repro.kernels.ssm_scan.ops import ssm_scan
 from repro.kernels.ssm_scan.ref import ssm_scan_ref
 
@@ -77,6 +81,73 @@ def test_ring_lookup64_no_recompile_on_churn():
         want = (np.searchsorted(table, keys) % table.size).astype(np.int32)
         np.testing.assert_array_equal(np.asarray(got), want)
         traces.append(ring_lookup64._cache_size())
+    assert traces[0] == traces[-1]  # no new trace after the first call
+
+
+def _bucket_arrays(table: np.ndarray, bits: int):
+    """Radix-bucketized view of a sorted uint64 table (DESIGN.md §7):
+    (2^bits, BW) rows of sorted in-bucket entries with every slack slot
+    holding the bucket's successor id."""
+    nb = 1 << bits
+    edges = np.arange(nb, dtype=np.uint64) << np.uint64(64 - bits)
+    starts = np.searchsorted(table, edges)
+    ends = np.append(starts[1:], table.size)
+    occ = (ends - starts).astype(np.int32)
+    assert occ.max() < BW
+    pad = table[ends % table.size]
+    j = np.arange(BW)[None, :]
+    idx = np.minimum(starts[:, None] + j, table.size - 1)
+    vals = np.where(j < occ[:, None], table[idx], pad[:, None])
+    hi, lo = _split64(vals)
+    return hi, lo, occ
+
+
+@pytest.mark.parametrize("n,q,bits", [(5, 64, 6), (500, 257, 6),
+                                      (4096, 1024, 8), (50_000, 2048, 11)])
+def test_ring_lookup_bucketed_sweep(n, q, bits):
+    """Bucketized kernel vs numpy uint64 searchsorted, including same-hi
+    word pairs and the exact ownership boundaries."""
+    base = RNG.integers(0, 2**64, size=n, dtype=np.uint64)
+    base[1::4] = (base[0::4][: base[1::4].size] | np.uint64(1))
+    table = np.sort(np.unique(base))
+    keys = np.concatenate([
+        RNG.integers(0, 2**64, size=q, dtype=np.uint64),
+        table[:16], table[:16] + np.uint64(1), table[:16] - np.uint64(1),
+        np.array([0, 2**64 - 1], np.uint64)])
+    want = table[np.searchsorted(table, keys) % table.size]
+    bhi, blo, occ = _bucket_arrays(table, bits)
+    khi, klo = _split64(keys)
+    args = (jnp.asarray(khi), jnp.asarray(klo), jnp.asarray(bhi),
+            jnp.asarray(blo), jnp.asarray(occ))
+    ohi, olo = ring_lookup_bucketed(*args)
+    got = (np.asarray(ohi).astype(np.uint64) << np.uint64(32)) \
+        | np.asarray(olo).astype(np.uint64)
+    np.testing.assert_array_equal(got, want)
+    rhi, rlo = ring_lookup_bucketed_ref(*args)
+    ref = (np.asarray(rhi).astype(np.uint64) << np.uint64(32)) \
+        | np.asarray(rlo).astype(np.uint64)
+    np.testing.assert_array_equal(ref, want)
+
+
+def test_ring_lookup_bucketed_no_recompile_on_churn():
+    """Same directory size, different row contents/occupancy -> one jit
+    trace: membership churn only moves data."""
+    bits, q = 7, 128
+    keys = RNG.integers(0, 2**64, size=q, dtype=np.uint64)
+    khi, klo = _split64(keys)
+    traces = []
+    for n_live in (900, 901, 2500):
+        table = np.sort(np.unique(
+            RNG.integers(0, 2**64, size=n_live, dtype=np.uint64)))
+        bhi, blo, occ = _bucket_arrays(table, bits)
+        ohi, olo = ring_lookup_bucketed(
+            jnp.asarray(khi), jnp.asarray(klo), jnp.asarray(bhi),
+            jnp.asarray(blo), jnp.asarray(occ))
+        got = (np.asarray(ohi).astype(np.uint64) << np.uint64(32)) \
+            | np.asarray(olo).astype(np.uint64)
+        want = table[np.searchsorted(table, keys) % table.size]
+        np.testing.assert_array_equal(got, want)
+        traces.append(ring_lookup_bucketed._cache_size())
     assert traces[0] == traces[-1]  # no new trace after the first call
 
 
