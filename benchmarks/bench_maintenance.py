@@ -1,0 +1,112 @@
+"""Maintenance-traffic benchmark: the §VII D1HT-vs-1h-Calot comparison
+at the paper's Internet scale (Figs 3-4), on the vectorized churn plane.
+
+For ring sizes n in {10^3 .. 10^6} runs the full churn measurement
+window (continuous join/leave/crash churn, Gnutella-session dynamics)
+through ``repro.core.jax_sim.simulate_churn`` for BOTH protocols and
+records:
+
+  * per-peer mean and system-wide sum maintenance bandwidth (bit/s),
+    against the analytical models (Eqs IV.5-IV.7 / Eq VII.1),
+  * the one-hop-lookup fraction (claim C1 under churn),
+  * simulated events/s (wall-clock throughput of the plane — the
+    ``edra_tree`` kernel hot path; the CI regression gate watches the
+    n=10^5 / n=10^4 throughput ratio, which cancels runner speed).
+
+Emits BENCH_maintenance.json (cwd by default) so future PRs can track
+both the paper reproduction (D1HT < Calot ordering, model agreement)
+and the simulation plane's throughput.
+
+Usage: PYTHONPATH=src python benchmarks/bench_maintenance.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.churn import ChurnConfig
+from repro.core.jax_sim import simulate_churn
+
+
+def _run_one(n: int, proto: str, duration: float, warmup: float,
+             seed: int, interpret) -> dict:
+    cfg = ChurnConfig(n=n, s_avg=174 * 60, protocol=proto,
+                      duration=duration, warmup=warmup, seed=seed)
+    t0 = time.perf_counter()
+    r = simulate_churn(cfg, interpret=interpret)
+    wall = time.perf_counter() - t0
+    return {
+        "mean_out_bps": round(r.mean_out_bps, 1),
+        "sum_out_kbps": round(r.sum_out_bps / 1000.0, 1),
+        "one_hop_fraction": round(r.one_hop_fraction, 5),
+        "analytical_bps": round(r.analytical_bps, 1),
+        "ratio_sim_over_model": round(
+            r.mean_out_bps / max(r.analytical_bps, 1e-9), 3),
+        "mean_ack_s": round(r.mean_ack_s, 3),
+        "events": r.events,
+        "wall_s": round(wall, 2),
+        "events_per_s": round(r.events / max(wall, 1e-9), 1),
+    }
+
+
+def run(full: bool = False, *, out: str = "BENCH_maintenance.json",
+        sizes=None, duration: float = None, warmup: float = None,
+        seed: int = 1, interpret=None) -> list:
+    """Harness entry point (benchmarks.run registers this).
+
+    ``full`` uses the paper's 30-min metered window on the 10^3..10^6
+    sweep; quick mode shrinks the window and sizes for the CI smoke.
+    The regression gate re-runs ``--sizes 10000 100000`` at FULL window
+    settings so its numbers are comparable with the committed JSON.
+    """
+    if sizes is None:
+        sizes = (10**3, 10**4, 10**5, 10**6) if full else (10**3, 10**4)
+    duration = duration if duration is not None else (1800.0 if full else 300.0)
+    warmup = warmup if warmup is not None else (300.0 if full else 60.0)
+    results = []
+    for n in sizes:
+        row = {"n": n, "s_avg_min": 174, "duration_s": duration}
+        for proto in ("d1ht", "calot"):
+            row[proto] = _run_one(n, proto, duration, warmup, seed,
+                                  interpret)
+        row["calot_over_d1ht"] = round(
+            row["calot"]["mean_out_bps"]
+            / max(row["d1ht"]["mean_out_bps"], 1e-9), 2)
+        results.append(row)
+        print(f"n={n:>8}  d1ht={row['d1ht']['mean_out_bps']:>9} bps "
+              f"(model {row['d1ht']['analytical_bps']})  "
+              f"calot={row['calot']['mean_out_bps']:>10} bps "
+              f"(model {row['calot']['analytical_bps']})  "
+              f"calot/d1ht={row['calot_over_d1ht']:>5}x  "
+              f"onehop={row['d1ht']['one_hop_fraction']}  "
+              f"sim={row['d1ht']['events_per_s']} ev/s", flush=True)
+
+    payload = {
+        "benchmark": "maintenance",
+        "mode": "full-window" if full else "quick",
+        "results": results,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_maintenance.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="short window + small sizes (CI smoke)")
+    ap.add_argument("--sizes", type=int, nargs="+", default=None,
+                    help="ring sizes to sweep (default: 1e3..1e6 full)")
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="run the compiled Pallas kernel (real TPU only)")
+    args = ap.parse_args()
+    run(full=not args.quick, out=args.out,
+        sizes=tuple(args.sizes) if args.sizes else None,
+        interpret=False if args.no_interpret else None)
+
+
+if __name__ == "__main__":
+    main()

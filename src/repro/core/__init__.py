@@ -6,9 +6,11 @@
   analysis   Eqs IV.5-IV.7 + 1h-Calot (VII.1) + OneHop + Quarantine models
   quarantine Quarantine admission mechanism (§V)
   ringstate  unified versioned device-resident routing table (DESIGN.md)
+  churn      shared §VII churn-run shapes (DES + vectorized plane)
   jax_sim    vectorized JAX protocol simulator (claims C1/C5 at scale)
 """
-from . import analysis, edra, quarantine, ring, ringstate, tuning
+from . import analysis, churn, edra, quarantine, ring, ringstate, tuning
+from .churn import ChurnConfig, ChurnResult, SessionDist
 from .edra import Event, EventBuffer, dissemination_tree
 from .quarantine import QuarantineManager
 from .ring import RoutingTable, build_ring, hash_id, key_id, peer_id
@@ -16,7 +18,8 @@ from .ringstate import OwnerDiff, RingState
 from .tuning import EdraParams
 
 __all__ = [
-    "analysis", "edra", "quarantine", "ring", "ringstate", "tuning",
+    "analysis", "churn", "edra", "quarantine", "ring", "ringstate", "tuning",
+    "ChurnConfig", "ChurnResult", "SessionDist",
     "Event", "EventBuffer", "dissemination_tree", "QuarantineManager",
     "OwnerDiff", "RingState", "RoutingTable", "build_ring", "hash_id", "key_id",
     "peer_id", "EdraParams",

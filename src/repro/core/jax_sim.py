@@ -10,9 +10,25 @@ truncation) — without materializing individual messages.  Used to:
     analytical model, Eqs IV.5-IV.7 (claim C5),
   * measure acknowledge-time statistics against the Theorem-1 bound.
 
+Two entry points (DESIGN.md §8):
+
+  * ``simulate(SimConfig)`` — the original fixed-n plane: dense (E, n)
+    event-by-peer matrices, exact per-peer metering, 10^4..10^5 peers.
+  * ``simulate_churn(ChurnConfig)`` — the §VII reproduction at the
+    paper's Internet scale (n up to 10^6-10^7): continuous
+    join/leave/crash churn with Quarantine admission (the same
+    ``ChurnConfig`` the message-level DES consumes), D1HT vs 1h-Calot
+    head-to-head, per-peer maintenance bandwidth + one-hop metering
+    matching the DES's §VII-A accounting.  The (E, n) matrix is
+    replaced by sampled (event, observer) pairs whose acknowledge
+    times come from the ``kernels.edra_tree`` Pallas kernel (ancestor-
+    chain walk, O(log n) per pair), so the measurement window at
+    n = 10^6 is a few tens of millions of pair evaluations instead of
+    10^11 matrix cells.
+
 The protocol-faithful message-level implementation lives in repro.dht
-(discrete-event simulator); this module trades per-message fidelity for
-scale (10^4..10^5 peers in seconds on CPU).
+(discrete-event simulator); it stays the oracle the vectorized planes
+are twin-checked against at overlapping n (tests/test_jax_sim.py).
 
 Model notes
 -----------
@@ -31,14 +47,16 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .churn import ChurnConfig, ChurnResult, SessionDist, delay_mean_seconds
 from .tuning import EdraParams
-from .analysis import M_BITS, V_A, V_M
+from .analysis import (M_BITS, V_A, V_C, V_H, V_M, calot_bandwidth,
+                       d1ht_bandwidth)
 
 
 @dataclass(frozen=True)
@@ -227,3 +245,278 @@ def simulate(cfg: SimConfig) -> SimResult:
         analytical_bps=d1ht_bandwidth(cfg.n, cfg.s_avg, cfg.f),
         per_peer_out_bps=out_np,
     )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized churn plane (DESIGN.md §8): the §VII experiment at 10^6 peers
+# ---------------------------------------------------------------------------
+
+_CALOT_HEARTBEAT = 15.0      # four per minute (§VII-A)
+_CALOT_PROBE_TIMEOUT = 5.0   # dht.calot_node probe confirmation window
+
+
+def _churn_event_stream(cfg: ChurnConfig, rng):
+    """Continuous join/leave/crash churn as per-peer renewal processes.
+
+    Mirrors dht.experiment.run_churn's driver: per-peer sessions from
+    the §V volatile-fraction mix, half the leaves are crashes, leavers
+    rejoin after ``rejoin_delay`` with the same ID, and — when
+    ``quarantine_tq`` is set — a rejoin whose sampled session is shorter
+    than T_q is never admitted (no events at all, retry after the
+    session, §V) while admitted peers enter T_q late with the remainder
+    of their session.  Vectorized over peers round by round (each round
+    advances every still-active peer one alive/off cycle).
+
+    Returns (t, kind, crash) sorted by time — kind +1 join / -1 leave,
+    t the instant the ground-truth ring changes — plus quarantine
+    admission counters.
+    """
+    horizon = cfg.warmup + cfg.duration
+    sessions = SessionDist(cfg.s_avg, cfg.volatile_fraction,
+                           cfg.quarantine_tq or 600.0)
+    t_parts, k_parts, c_parts = [], [], []
+    q_admit = q_skip = 0
+    start = np.zeros(cfg.n)
+    sess = sessions.sample_array(rng, cfg.n)   # initial population: no gate
+    active = np.ones(cfg.n, bool)
+    while active.any():
+        idx = np.nonzero(active)[0]
+        t_leave = start[idx] + np.maximum(sess[idx], 1.0)
+        keep = t_leave <= horizon
+        idx, t_leave = idx[keep], t_leave[keep]
+        active[:] = False
+        if not idx.size:
+            break
+        crash = rng.random(idx.size) < cfg.crash_fraction
+        t_parts.append(t_leave)
+        k_parts.append(np.full(idx.size, -1, np.int8))
+        c_parts.append(crash)
+
+        t_re = t_leave + cfg.rejoin_delay
+        s_new = sessions.sample_array(rng, idx.size)
+        if cfg.quarantine_tq is not None:
+            tq = cfg.quarantine_tq
+            while True:
+                retry = (s_new <= tq) & (t_re <= horizon)
+                if not retry.any():
+                    break
+                q_skip += int(retry.sum())
+                t_re = np.where(retry, t_re + s_new + cfg.rejoin_delay, t_re)
+                s_new = np.where(retry, sessions.sample_array(rng, idx.size),
+                                 s_new)
+            t_join = t_re + tq
+            admit = (s_new > tq) & (t_join <= horizon)
+            q_admit += int(admit.sum())
+            s_next = np.maximum(s_new - tq, 1.0)
+        else:
+            t_join = t_re
+            admit = t_join <= horizon
+            s_next = s_new
+        j = idx[admit]
+        t_parts.append(t_join[admit])
+        k_parts.append(np.full(j.size, 1, np.int8))
+        c_parts.append(np.zeros(j.size, bool))
+        start[j] = t_join[admit]
+        sess[j] = s_next[admit]
+        active[j] = True
+
+    t = np.concatenate(t_parts) if t_parts else np.zeros(0)
+    kind = np.concatenate(k_parts) if k_parts else np.zeros(0, np.int8)
+    crash = np.concatenate(c_parts) if c_parts else np.zeros(0, bool)
+    order = np.argsort(t, kind="stable")
+    return t[order], kind[order], crash[order], q_admit, q_skip
+
+
+def _mean_live(n0: int, t: np.ndarray, kind: np.ndarray,
+               w0: float, w1: float) -> float:
+    """Time-averaged live-peer count over [w0, w1] from the event stream."""
+    n_after = n0 + np.cumsum(kind, dtype=np.int64)
+    inside = (t > w0) & (t < w1)
+    ti = t[inside]
+    ni = n_after[inside]
+    i0 = int(np.searchsorted(t, w0, side="right"))
+    n_at_w0 = int(n_after[i0 - 1]) if i0 > 0 else n0
+    edges = np.concatenate([[w0], ti, [w1]])
+    vals = np.concatenate([[n_at_w0], ni])
+    return float(np.sum(vals * np.diff(edges)) / max(w1 - w0, 1e-9))
+
+
+def _distinct_interval_counts(slot: np.ndarray, k_idx: np.ndarray,
+                              num_intervals: int, m: int) -> np.ndarray:
+    """Per-slot count of distinct interval indices (Rules 3-4 message
+    dedup: one M(l) per interval regardless of how many events it
+    carries).  slot/k_idx: (S,) int arrays of selected pairs."""
+    if not slot.size:
+        return np.zeros(m, np.int64)
+    flat = np.unique(slot.astype(np.int64) * num_intervals + k_idx)
+    return np.bincount(flat // num_intervals, minlength=m)
+
+
+def simulate_churn(cfg: ChurnConfig, *, meter_peers: Optional[int] = None,
+                   pair_budget: int = 24_000_000, chunk: int = 1 << 21,
+                   use_pallas: bool = True,
+                   interpret: Optional[bool] = None) -> ChurnResult:
+    """§VII churn measurement on the vectorized plane (D1HT or 1h-Calot).
+
+    Consumes the SAME ``ChurnConfig`` as the message-level DES
+    (dht.experiment.run_churn) and produces the same ``ChurnResult``
+    shape, so the two planes are interchangeable — the DES stays the
+    per-message oracle at n <= ~10^3, this plane carries the
+    measurement to the paper's "millions of users" regime (Figs 3-4).
+
+    Metering matches the DES's §VII-A accounting: per-peer outbound
+    bits = maintenance-message headers sent (one M(l) per Theta
+    interval that acknowledged an event with TTL > l, M(0) always) +
+    acks for messages received + Rule-8-truncated event payloads;
+    lookups and routing-table transfers excluded.  Per-peer quantities
+    are measured on ``meter_peers`` sampled observers (default: sized
+    so event x observer pairs stay under ``pair_budget``); acknowledge
+    times come from the ``kernels.edra_tree`` kernel.
+    """
+    from repro.kernels.edra_tree.ops import edra_tree
+
+    rng = np.random.default_rng(cfg.seed)
+    params = EdraParams.derive(cfg.n, cfg.s_avg, cfg.f)
+    theta = params.theta
+    delta_avg = delay_mean_seconds(cfg.delay)
+    calot = cfg.protocol == "calot"
+    w0, w1 = cfg.warmup, cfg.warmup + cfg.duration
+
+    t, kind, crash, q_admit, q_skip = _churn_event_stream(cfg, rng)
+    n_after = np.maximum(cfg.n + np.cumsum(kind, dtype=np.int64), 2)
+    nbar = _mean_live(cfg.n, t, kind, w0, w1)
+
+    # events whose dissemination can overlap the metered window: the ack
+    # tail spans detection (<= 2 Theta) + rho buffered hops
+    tail = (params.rho + 2) * theta + 20.0 * delta_avg + 1.0
+    if calot:
+        tail = 2.5 * _CALOT_HEARTBEAT + _CALOT_PROBE_TIMEOUT \
+            + (params.rho + 2) * 3.0 * delta_avg + 1.0
+    sel = (t >= w0 - tail) & (t <= w1)
+    t_ev = t[sel]
+    crash_ev = crash[sel]
+    n_ev = n_after[sel].astype(np.uint32)
+    e = int(t_ev.size)
+    events_in_window = int(np.sum((t >= w0) & (t <= w1)))
+
+    if calot:
+        detect = t_ev + np.where(
+            crash_ev,
+            1.5 * _CALOT_HEARTBEAT + rng.uniform(0, _CALOT_HEARTBEAT, e)
+            + _CALOT_PROBE_TIMEOUT,
+            0.0)
+    else:
+        detect = t_ev + np.where(
+            crash_ev, theta + rng.uniform(0, theta, e), 0.0)   # U(Θ, 2Θ)
+
+    m = meter_peers or int(np.clip(pair_budget // max(e, 1), 16, 1024))
+    analytical = (calot_bandwidth(cfg.n, cfg.s_avg) if calot else
+                  d1ht_bandwidth(cfg.n, cfg.s_avg, cfg.f))
+
+    # Eq IV.4 early interval close: every peer acks every event, so its
+    # buffer fills at the global event rate; an interval also ends when
+    # the buffer reaches E (dht.d1ht_node._early_close_check).  The
+    # effective interval length feeds the message accounting below and
+    # the kernel's per-hop flush model.
+    fill_rate = t.size / max(cfg.warmup + cfg.duration, 1.0)
+    e_cap = float(max(2.0, np.ceil(params.max_events)))
+    if calot or fill_rate <= 0.0:
+        theta_eff = theta
+    else:
+        fills = rng.gamma(e_cap, 1.0 / fill_rate, 8192)
+        theta_eff = float(np.minimum(theta, fills).mean())
+    if e == 0:
+        return ChurnResult(
+            cfg=cfg, params=params, events=0, one_hop_fraction=1.0,
+            sum_out_bps=0.0, mean_out_bps=0.0, analytical_bps=analytical,
+            quarantine_admitted=q_admit, quarantine_skipped=q_skip)
+
+    # (E, M) pairs: uniform observer offsets per event (reporters are
+    # uniform on the ring, so fixed metered peers see uniform offsets)
+    reporter = (rng.random(e) * n_ev).astype(np.uint32)
+    offsets = (rng.random((e, m)) * n_ev[:, None]).astype(np.uint32)
+    ekey = rng.integers(0, 2**32, size=e, dtype=np.uint64).astype(np.uint32)
+    levels = max(1, int(np.ceil(np.log2(max(cfg.n, 2)))))
+
+    p = e * m
+    flat = {
+        "offset": offsets.reshape(p),
+        "n": np.broadcast_to(n_ev[:, None], (e, m)).reshape(p),
+        "reporter": np.broadcast_to(reporter[:, None], (e, m)).reshape(p),
+        "t0": np.broadcast_to(detect[:, None].astype(np.float32),
+                              (e, m)).reshape(p),
+        "ekey": np.broadcast_to(ekey[:, None], (e, m)).reshape(p),
+    }
+    csize = min(chunk, (p + 2047) // 2048 * 2048)
+    ack = np.empty(p, np.float32)
+    ttl = np.empty(p, np.int32)
+    sends = np.empty(p, np.int32)
+    kernel_theta = 0.0 if calot else theta   # Calot forwards unbuffered
+    for lo in range(0, p, csize):
+        hi = min(lo + csize, p)
+        pad = csize - (hi - lo)
+        args = [np.pad(flat[k][lo:hi], (0, pad), constant_values=v)
+                for k, v in (("offset", 0), ("n", 1), ("reporter", 0),
+                             ("t0", 0), ("ekey", 0))]
+        a, tt, _d, _par, sn = edra_tree(
+            *(jnp.asarray(x) for x in args),
+            levels=levels, theta=kernel_theta, delta_avg=delta_avg,
+            seed=cfg.seed, fill_rate=0.0 if calot else fill_rate,
+            e_cap=e_cap, use_pallas=use_pallas, interpret=interpret)
+        ack[lo:hi] = np.asarray(a)[:hi - lo]
+        ttl[lo:hi] = np.asarray(tt)[:hi - lo]
+        sends[lo:hi] = np.asarray(sn)[:hi - lo]
+
+    ack = ack.reshape(e, m)
+    ttl = ttl.reshape(e, m)
+    sends = sends.reshape(e, m)
+    in_win = (ack >= w0) & (ack < w1)
+
+    # -- one-hop fraction: expected stale routing entries at a random
+    #    lookup instant = sum over (event, observer) staleness overlap
+    stale = np.clip(np.minimum(ack, w1) - np.maximum(t_ev[:, None], w0),
+                    0.0, None)
+    mean_stale_entries = float(stale.sum()) / m / cfg.duration
+    one_hop = 1.0 - mean_stale_entries / max(nbar, 1.0)
+
+    ack_rel = (ack - t_ev[:, None])[in_win]
+    mean_ack = float(ack_rel.mean()) if ack_rel.size else 0.0
+    p99_ack = float(np.percentile(ack_rel, 99)) if ack_rel.size else 0.0
+
+    # -- per-peer maintenance traffic (§VII-A accounting) ------------------
+    if calot:
+        # one fixed-size message per event per tree edge + acks on every
+        # reception + 4 unacked heartbeats/min (Eq VII.1 measured)
+        out_bits = (sends * in_win).sum(axis=0).astype(np.float64) * V_C \
+            + in_win.sum(axis=0) * V_A \
+            + np.floor(cfg.duration / _CALOT_HEARTBEAT) * V_H
+    else:
+        num_intervals = int(np.ceil(cfg.duration / theta_eff)) + 2
+        phase = rng.uniform(0.0, theta_eff, m)
+        k_idx = np.clip(np.floor((ack - w0 - phase[None, :]) / theta_eff)
+                        .astype(np.int64), 0, num_intervals - 1)
+        slot = np.broadcast_to(np.arange(m)[None, :], (e, m))
+        ttl0 = np.floor(cfg.duration / theta_eff)
+        sent_levels = np.zeros(m, np.int64)
+        off2 = offsets.astype(np.int64)
+        n2 = n_ev[:, None].astype(np.int64)
+        for l in range(1, params.rho):
+            lv = in_win & (ttl > l) & ((off2 + (1 << l)) < n2)
+            sent_levels += _distinct_interval_counts(
+                slot[lv], k_idx[lv], num_intervals, m)
+        msgs_sent = ttl0 + sent_levels
+        # receptions: by ring symmetry the M(l) stream a peer receives is
+        # the one the peer 2^l counterclockwise sends — another uniform
+        # sample; decorrelate by rolling the metered sample
+        msgs_recv = ttl0 + np.roll(sent_levels, 1)
+        payload = (sends * in_win).sum(axis=0).astype(np.float64) * M_BITS
+        out_bits = msgs_sent * V_M + msgs_recv * V_A + payload
+
+    mean_out_bps = float(out_bits.mean()) / cfg.duration * (nbar / cfg.n)
+    return ChurnResult(
+        cfg=cfg, params=params, events=events_in_window,
+        one_hop_fraction=float(one_hop),
+        sum_out_bps=mean_out_bps * cfg.n, mean_out_bps=mean_out_bps,
+        analytical_bps=analytical,
+        quarantine_admitted=q_admit, quarantine_skipped=q_skip,
+        mean_ack_s=mean_ack, p99_ack_s=p99_ack)

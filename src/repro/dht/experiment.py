@@ -12,92 +12,21 @@ true current owner (stale entries => routing failure => extra hops).
 """
 from __future__ import annotations
 
-import math
 import random
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
 
 from repro.core.analysis import calot_bandwidth, d1ht_bandwidth
+# Shared run shapes (DESIGN.md §8): this DES and the vectorized plane in
+# repro.core.jax_sim consume the SAME config and produce the SAME result
+# type, so the twin tests compare them field by field.
+from repro.core.churn import ChurnConfig, ChurnResult, SessionDist
 from repro.core.ring import RoutingTable, build_ring
 from repro.core.tuning import EdraParams
 from .calot_node import CalotPeer
 from .d1ht_node import D1HTPeer
-from .des import DelayModel, LanDelay, SimNet
+from .des import LanDelay, SimNet
 from .messages import V_A_BITS
 
-
-# ---------------------------------------------------------------------------
-# Session-length distributions (§V: P2P sessions are heavy-tailed)
-# ---------------------------------------------------------------------------
-
-class SessionDist:
-    """Exponential by default; ``volatile_fraction`` mixes in short
-    (< t_q) sessions to model the heavy tail head (24% KAD / 31% Gnutella
-    sessions under 10 min)."""
-
-    def __init__(self, s_avg: float, volatile_fraction: float = 0.0,
-                 t_q: float = 600.0):
-        self.s_avg = s_avg
-        self.vol = volatile_fraction
-        self.t_q = t_q
-        if volatile_fraction > 0.0:
-            short_mean = t_q / 2.0
-            self.long_mean = (s_avg - volatile_fraction * short_mean) / (
-                1.0 - volatile_fraction)
-        else:
-            self.long_mean = s_avg
-
-    def sample(self, rng: random.Random) -> float:
-        if self.vol > 0.0 and rng.random() < self.vol:
-            return rng.uniform(0.0, self.t_q)
-        return rng.expovariate(1.0 / self.long_mean)
-
-
-# ---------------------------------------------------------------------------
-# Experiment config / result
-# ---------------------------------------------------------------------------
-
-@dataclass
-class ChurnConfig:
-    n: int
-    s_avg: float                  # seconds
-    protocol: str = "d1ht"        # "d1ht" | "calot"
-    duration: float = 1800.0      # metered window (paper: 30 min)
-    warmup: float = 300.0
-    delay: Optional[DelayModel] = None
-    seed: int = 0
-    rejoin_delay: float = 180.0   # paper: rejoin in 3 minutes, same ID
-    crash_fraction: float = 0.5   # paper: half the leaves are SIGKILL
-    lookup_samples: int = 4000
-    quarantine_tq: Optional[float] = None
-    volatile_fraction: float = 0.0
-    f: float = 0.01
-
-
-@dataclass
-class ChurnResult:
-    cfg: ChurnConfig
-    params: EdraParams
-    events: int
-    one_hop_fraction: float
-    sum_out_bps: float            # Σ over peers (Figs 3-4 plot the sum)
-    mean_out_bps: float
-    analytical_bps: float         # per-peer model prediction
-    quarantine_admitted: int = 0
-    quarantine_skipped: int = 0
-
-    def summary(self) -> Dict[str, float]:
-        return {
-            "n": self.cfg.n,
-            "protocol": self.cfg.protocol,
-            "events": self.events,
-            "one_hop_fraction": round(self.one_hop_fraction, 5),
-            "mean_out_bps": round(self.mean_out_bps, 1),
-            "sum_out_kbps": round(self.sum_out_bps / 1000.0, 1),
-            "analytical_bps": round(self.analytical_bps, 1),
-            "ratio_sim_over_model": round(
-                self.mean_out_bps / max(self.analytical_bps, 1e-9), 3),
-        }
+__all__ = ["ChurnConfig", "ChurnResult", "SessionDist", "run_churn"]
 
 
 # ---------------------------------------------------------------------------

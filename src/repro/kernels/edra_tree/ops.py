@@ -1,0 +1,43 @@
+"""Jit'd public wrapper: batched EDRA-tree ack times / coordinates.
+
+Same dispatch contract as ``ring_lookup``: Pallas kernel by default,
+``interpret=None`` autodetects the backend (compiled on TPU,
+interpreter mode elsewhere), ``use_pallas=False`` pins the jnp oracle.
+``theta``/``delta_avg``/``levels``/``seed`` are static — one trace per
+operating point (a churn sweep entry), never per event batch.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from ..backend import resolve_interpret
+from .kernel import edra_tree_pallas
+from .ref import edra_tree_ref
+
+
+@partial(jax.jit, static_argnames=("levels", "theta", "delta_avg", "seed",
+                                   "fill_rate", "e_cap",
+                                   "use_pallas", "interpret"))
+def edra_tree(offset: jax.Array, n: jax.Array, reporter: jax.Array,
+              t_detect: jax.Array, event_key: jax.Array, *,
+              levels: int, theta: float, delta_avg: float, seed: int = 0,
+              fill_rate: float = 0.0, e_cap: float = 2.0,
+              use_pallas: bool = True,
+              interpret: Optional[bool] = None):
+    """(P,) uint32 offsets/ring sizes/reporters/event keys + (P,) f32
+    detection times -> (ack f32, ttl i32, depth i32, parent u32,
+    sends i32), each (P,).  See kernels.edra_tree.ref.tree_math for the
+    exact semantics (``fill_rate``/``e_cap`` arm the Eq IV.4
+    early-interval-close model)."""
+    if use_pallas:
+        return edra_tree_pallas(offset, n, reporter, t_detect, event_key,
+                                levels=levels, theta=theta,
+                                delta_avg=delta_avg, seed=seed,
+                                fill_rate=fill_rate, e_cap=e_cap,
+                                interpret=resolve_interpret(interpret))
+    return edra_tree_ref(offset, n, reporter, t_detect, event_key,
+                         levels=levels, theta=theta, delta_avg=delta_avg,
+                         seed=seed, fill_rate=fill_rate, e_cap=e_cap)

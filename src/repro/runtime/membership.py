@@ -19,6 +19,7 @@ node in repro.dht drives it live in examples/dht_cluster.py.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -40,10 +41,15 @@ class NodeInfo:
 class Membership:
     """Full-routing-table membership view with quarantine admission."""
 
+    #: sliding event-rate window (seconds) and retained-sample bound for
+    #: the §IV-D retune — see ``_retune``
+    RATE_HORIZON = 300.0
+    RATE_MAX_SAMPLES = 4096
+
     def __init__(self, *, s_avg: float = 3600.0, f: float = 0.01,
                  t_q: float = 600.0, now: Callable[[], float] = time.monotonic):
         self.now = now
-        self._t0 = now()   # event-rate window anchor (see _retune)
+        self._event_times: deque = deque(maxlen=self.RATE_MAX_SAMPLES)
         # ONE RingState backs the facade table, the placement layer, and
         # the serving router's device-resident lookup table (DESIGN.md §4).
         self.ring_state = RingState()
@@ -57,6 +63,7 @@ class Membership:
     # -- event intake (from the D1HT peer / DES / orchestrator) -------------
     def on_event(self, ev: Event) -> None:
         self._events_seen += 1
+        self._event_times.append(self.now())
         if ev.kind == "join":
             self.table.add(ev.subject_id)
             self.nodes.setdefault(
@@ -76,14 +83,25 @@ class Membership:
         """§IV-D self-organization: re-derive Theta from the locally
         observed event rate — no coordination required.
 
-        The rate window is time since *this view was constructed*, not
-        the raw clock value: ``time.monotonic`` counts from boot (or an
-        arbitrary epoch), so dividing by it deflated r by orders of
-        magnitude and Theta retuning was wildly off on any host with
-        nontrivial uptime."""
+        The rate is estimated over a SLIDING window (the last
+        ``RATE_HORIZON`` seconds of event timestamps, bounded by
+        ``RATE_MAX_SAMPLES``), not over the view's whole lifetime: a
+        lifetime-anchored window decays toward 0 on a long-lived view,
+        so a churn burst after a quiet day barely moved Theta — the
+        opposite of what §IV-D needs (the estimate must track the
+        CURRENT rate so Theta shrinks when churn spikes).  The span of
+        the retained samples is clamped below by 1 s (a same-instant
+        burst still yields a finite, aggressive rate) and above by the
+        horizon; samples older than the horizon are dropped."""
+        now = self.now()
+        while self._event_times and now - self._event_times[0] > self.RATE_HORIZON:
+            self._event_times.popleft()
+        if not self._event_times:
+            return
         n = max(len(self.table), 2)
-        window = max(self.now() - self._t0, 1.0)
-        r = self._events_seen / window
+        span = now - self._event_times[0]
+        window = min(max(span, 1.0), self.RATE_HORIZON)
+        r = len(self._event_times) / window
         if r > 0:
             self.params = self.params.retune(n, r)
 
@@ -93,16 +111,23 @@ class Membership:
         nid = peer_id(host, port)
         if preemptible:
             gateways = [int(x) for x in self.ring_state.active_ids()[:2]]
+            # (re-)enqueue: a node restarting before T_q elapsed serves a
+            # FRESH quarantine from now (§V — the old incarnation's
+            # progress toward admission died with it)
             self.quarantine.enqueue(nid, (host, port), self.now(), gateways)
             if nid in self.table:
                 # an ACTIVE member restarting as a spot instance: re-mask
                 # through quarantine_member so listeners migrate its
                 # owned state (a bare flag flip would orphan it)
                 self.quarantine_member(nid)
-            else:
+            elif not self.ring_state.is_quarantined(nid):
                 # tracked in the shared state but masked out of ownership
                 # until T_q elapses (paper §V): gateways proxy its lookups.
                 self.ring_state.add(nid, quarantined=True)
+            # else: restart while already quarantine-masked — the tracked
+            # masked slot is reused as-is; re-adding would rely on
+            # RingState.add treating a same-flag duplicate as a no-op,
+            # and any drift there would corrupt the sorted table.
         else:
             self.admit(nid, (host, port))
         return nid

@@ -28,6 +28,18 @@ def _static_net(cls, n, seed=0):
     return net, params, ids
 
 
+def test_lan_delay_mean_matches_docstring():
+    """Regression: the 10 us floor used to be ADDED to an Exp(70 us)
+    draw, inflating the realized mean to ~80 us.  The shifted
+    exponential must realize the documented 70 us one-way mean while
+    keeping the floor as a hard lower bound."""
+    rng = random.Random(0)
+    d = LanDelay()
+    xs = [d.sample(rng) for _ in range(200_000)]
+    assert min(xs) >= 10e-6
+    assert sum(xs) / len(xs) == pytest.approx(70e-6, rel=0.02)
+
+
 @pytest.mark.parametrize("cls", [D1HTPeer, CalotPeer])
 def test_single_crash_reaches_all_peers(cls):
     net, params, ids = _static_net(cls, 48)

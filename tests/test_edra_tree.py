@@ -1,0 +1,180 @@
+"""kernels.edra_tree: Pallas kernel == numpy reference == core.edra tree.
+
+The kernel's tree coordinates (ttl / depth / parent / Rule-8 fan-out)
+must match the pure-numpy EDRA machinery in repro.core.edra for EVERY
+ring size — especially non-powers-of-two, where Rule-8 truncation and
+rho = ceil(log2 n) interact.  Acknowledge times must match the numpy
+``tree_math`` realization (same hash-derived phases and delays) and
+respect the tree order (a child acks after its parent's flush).
+
+Hypothesis drives the adversarial sweeps when available (see
+requirements-dev.txt); fixed-seed sweeps below always run.
+"""
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.core import edra
+from repro.kernels.edra_tree.kernel import edra_tree_pallas
+from repro.kernels.edra_tree.ops import edra_tree
+from repro.kernels.edra_tree.ref import tree_math
+
+RNG = np.random.default_rng(7)
+
+
+def _levels(n: int) -> int:
+    return max(1, int(np.ceil(np.log2(max(n, 2)))))
+
+
+def _pairs(n: int, extra_offsets=()):
+    """Adversarial offset set: full ring when small, else boundaries +
+    powers of two +- 1 + random fill."""
+    if n <= 1024:
+        offs = np.arange(n, dtype=np.uint32)
+    else:
+        pow2 = 1 << np.arange(_levels(n), dtype=np.uint32)
+        cand = np.concatenate([
+            np.array([0, 1, n - 1], np.uint32), pow2, pow2 - 1,
+            np.minimum(pow2 + 1, n - 1),
+            RNG.integers(0, n, 512).astype(np.uint32)])
+        offs = np.unique(cand[cand < n])
+    if len(extra_offsets):
+        offs = np.unique(np.concatenate(
+            [offs, np.asarray(extra_offsets, np.uint32)]))
+    p = offs.size
+    return {
+        "offset": offs,
+        "n": np.full(p, n, np.uint32),
+        "reporter": RNG.integers(0, n, p).astype(np.uint32),
+        "t_detect": RNG.uniform(0, 50, p).astype(np.float32),
+        "event_key": RNG.integers(0, 2**32, p, dtype=np.uint64
+                                  ).astype(np.uint32),
+    }
+
+
+def _run_both(args, **kw):
+    ref = tree_math(np, args["offset"], args["n"], args["reporter"],
+                    args["t_detect"], args["event_key"], **kw)
+    got = edra_tree(*(jnp.asarray(args[k]) for k in
+                      ("offset", "n", "reporter", "t_detect", "event_key")),
+                    **kw)
+    return ref, got
+
+
+def _assert_tree_equiv(n: int, theta: float, fill_rate: float = 0.0):
+    args = _pairs(n)
+    kw = dict(levels=_levels(n), theta=theta, delta_avg=0.02, seed=5,
+              fill_rate=fill_rate, e_cap=4.0)
+    (a_r, ttl_r, d_r, p_r, s_r), (a_k, ttl_k, d_k, p_k, s_k) = \
+        _run_both(args, **kw)
+    offs64 = args["offset"].astype(np.uint64)
+    # tree coordinates == the numpy EDRA machinery (core.edra)
+    np.testing.assert_array_equal(ttl_r, edra.ack_ttl(offs64, n))
+    np.testing.assert_array_equal(d_r, edra.ack_depth(offs64))
+    np.testing.assert_array_equal(p_r.astype(np.int64),
+                                  edra.parent_offset(offs64))
+    # kernel == reference (exact ints, float32-tolerance ack)
+    np.testing.assert_array_equal(np.asarray(ttl_k), ttl_r)
+    np.testing.assert_array_equal(np.asarray(d_k), d_r)
+    np.testing.assert_array_equal(np.asarray(p_k), p_r)
+    np.testing.assert_array_equal(np.asarray(s_k), s_r)
+    np.testing.assert_allclose(np.asarray(a_k), a_r, rtol=3e-5, atol=1e-3)
+    # acks happen at/after detection, and after the parent chain starts
+    assert (a_r >= args["t_detect"] - 1e-3).all()
+    if n <= 1024:
+        # Theorem 1 (exactly-once): Rule-8 fan-outs over the full ring
+        # cover every non-reporter peer exactly once
+        assert int(s_r.sum()) == n - 1
+
+
+@pytest.mark.parametrize("n", [2, 3, 5, 48, 255, 256, 257, 1000, 1024,
+                               12_345, 1_000_000])
+def test_tree_equiv_sweep(n):
+    _assert_tree_equiv(n, theta=7.5)
+
+
+@pytest.mark.parametrize("n", [7, 500, 4096])
+def test_tree_equiv_unbuffered_and_early_close(n):
+    _assert_tree_equiv(n, theta=0.0)                  # 1h-Calot mode
+    _assert_tree_equiv(n, theta=7.5, fill_rate=0.2)   # Eq IV.4 model
+
+
+def test_ack_respects_tree_order():
+    """Within one event, a child's ack is strictly after its parent's
+    flush: with theta > 0 every hop adds at least the network delay, so
+    ack(child) > ack(parent) whenever the chain is shared."""
+    n = 512
+    offs = np.arange(n, dtype=np.uint32)
+    ones = np.ones(n, np.uint32)
+    kw = dict(levels=_levels(n), theta=5.0, delta_avg=0.01, seed=1)
+    ack, ttl, depth, parent, _ = tree_math(
+        np, offs, ones * n, ones * 17, np.zeros(n, np.float32),
+        ones * 0xABCD1234, **kw)
+    # same event_key/reporter for every pair => shared ancestor chain
+    assert (ack[1:] > ack[parent[1:].astype(np.int64)]).all()
+    # Theorem 1 bound shape: depth-d peers ack after >= d flush waits
+    assert ack[0] == 0.0
+
+
+def test_no_recompile_across_event_batches():
+    """Same pair-block shape, different data -> one jit trace (churn
+    batches never re-specialize the kernel)."""
+    traces = []
+    for seed in (1, 2, 3):
+        rng = np.random.default_rng(seed)
+        p = 4096
+        args = (rng.integers(0, 1000, p).astype(np.uint32),
+                np.full(p, 1000, np.uint32),
+                rng.integers(0, 1000, p).astype(np.uint32),
+                rng.uniform(0, 10, p).astype(np.float32),
+                rng.integers(0, 2**32, p, dtype=np.uint64
+                             ).astype(np.uint32))
+        edra_tree(*(jnp.asarray(a) for a in args),
+                  levels=10, theta=3.0, delta_avg=0.02)
+        traces.append(edra_tree._cache_size())
+    assert traces[0] == traces[-1]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis properties
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HYP = True
+except ImportError:                                   # pragma: no cover
+    _HYP = False
+
+
+if _HYP:
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(min_value=2, max_value=50_000),
+           theta=st.sampled_from([0.0, 1.0, 9.7]),
+           fill=st.sampled_from([0.0, 0.15]))
+    def test_hypothesis_tree_equiv(n, theta, fill):
+        _assert_tree_equiv(n, theta=theta, fill_rate=fill)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(min_value=2, max_value=4096), data=st.data())
+    def test_hypothesis_theorem1_fanout(n, data):
+        """Sum of Rule-8 fan-outs over a full ring is exactly n-1 for
+        ARBITRARY n (the exactly-once delivery of Theorem 1), and every
+        offset's parent has a strictly smaller offset (tree acyclicity)."""
+        offs = np.arange(n, dtype=np.uint32)
+        args = {
+            "offset": offs, "n": np.full(n, n, np.uint32),
+            "reporter": np.full(
+                n, data.draw(st.integers(0, n - 1)), np.uint32),
+            "t_detect": np.zeros(n, np.float32),
+            "event_key": np.full(
+                n, data.draw(st.integers(0, 2**32 - 1)), np.uint32),
+        }
+        _, ttl, _, parent, sends = tree_math(
+            np, args["offset"], args["n"], args["reporter"],
+            args["t_detect"], args["event_key"],
+            levels=_levels(n), theta=2.0, delta_avg=0.01)
+        assert int(sends.sum()) == n - 1
+        assert (parent[1:] < offs[1:]).all()
+        assert parent[0] == 0 and ttl[0] == edra.ack_ttl(
+            np.zeros(1, np.uint64), n)[0]

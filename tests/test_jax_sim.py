@@ -1,7 +1,10 @@
-"""Vectorized EDRA simulator: C1 + Theorem-1 bound at n=512."""
+"""Vectorized EDRA simulators: C1 + Theorem-1 bound at n=512 (fixed-n
+plane) and the §VII churn plane vs the DES oracle / analytical model
+(DESIGN.md §8 cross-validation ladder)."""
 import pytest
 
-from repro.core.jax_sim import SimConfig, simulate
+from repro.core.churn import ChurnConfig
+from repro.core.jax_sim import SimConfig, simulate, simulate_churn
 
 
 @pytest.mark.slow
@@ -17,3 +20,89 @@ def test_sim_one_hop_and_ack_bound():
 def test_sim_higher_churn_still_one_hop():
     r = simulate(SimConfig(n=512, s_avg=60 * 60, duration=900.0, seed=4))
     assert r.one_hop_fraction >= 0.99
+
+
+# ---------------------------------------------------------------------------
+# churn plane (simulate_churn)
+# ---------------------------------------------------------------------------
+
+def test_churn_plane_smoke_and_model_band():
+    """Fast config: the vectorized plane produces a sane ChurnResult and
+    lands in the analytical model's band (the model deliberately
+    overestimates, cf. test_sim_one_hop_and_ack_bound)."""
+    r = simulate_churn(ChurnConfig(n=512, s_avg=174 * 60, duration=300,
+                                   warmup=60, seed=3))
+    assert r.events > 0
+    assert r.one_hop_fraction >= 0.98
+    assert r.mean_ack_s > 0 and r.p99_ack_s >= r.mean_ack_s
+    assert 0.4 <= r.mean_out_bps / r.analytical_bps <= 1.3
+    assert r.sum_out_bps == pytest.approx(r.mean_out_bps * 512)
+
+
+def test_churn_plane_d1ht_beats_calot():
+    """The paper's headline ordering (Figs 3-4): D1HT's aggregated EDRA
+    maintenance costs less than 1h-Calot's one-event-per-message plan,
+    on the SAME event stream (same config/seed)."""
+    base = dict(n=2048, s_avg=169 * 60, duration=300, warmup=60, seed=9)
+    d1 = simulate_churn(ChurnConfig(protocol="d1ht", **base))
+    ca = simulate_churn(ChurnConfig(protocol="calot", **base))
+    assert d1.events == ca.events          # identical churn realization
+    assert d1.mean_out_bps < ca.mean_out_bps
+    assert ca.one_hop_fraction >= 0.98 and d1.one_hop_fraction >= 0.98
+
+
+def test_churn_plane_quarantine_reduces_traffic():
+    """§V on the vectorized plane: volatile peers never enter the ring,
+    so maintenance traffic drops and admissions/skips are counted."""
+    base = dict(n=2048, s_avg=174 * 60, duration=300, warmup=60, seed=7,
+                volatile_fraction=0.31)
+    plain = simulate_churn(ChurnConfig(**base))
+    quar = simulate_churn(ChurnConfig(quarantine_tq=600.0, **base))
+    assert quar.mean_out_bps < plain.mean_out_bps
+    assert quar.quarantine_skipped > 0
+    assert quar.events < plain.events
+    assert quar.one_hop_fraction >= 0.98
+
+
+@pytest.mark.slow
+def test_churn_twin_des_vs_vectorized_d1ht():
+    """DES <-> vectorized twin at overlapping n (the §VII methodology on
+    both planes from ONE ChurnConfig): per-peer maintenance bandwidth
+    and one-hop fraction must agree within tolerance."""
+    from repro.dht import run_churn
+
+    cfg = ChurnConfig(n=1000, s_avg=174 * 60, duration=600, warmup=120,
+                      seed=11)
+    des = run_churn(cfg)
+    vec = simulate_churn(cfg)
+    ratio = vec.mean_out_bps / des.mean_out_bps
+    assert 0.7 <= ratio <= 1.4, (vec.summary(), des.summary())
+    assert abs(vec.one_hop_fraction - des.one_hop_fraction) <= 0.006
+    assert vec.one_hop_fraction >= 0.99 and des.one_hop_fraction >= 0.99
+
+
+@pytest.mark.slow
+def test_churn_twin_des_vs_vectorized_calot():
+    from repro.dht import run_churn
+
+    cfg = ChurnConfig(n=512, s_avg=174 * 60, duration=600, warmup=120,
+                      seed=13, protocol="calot")
+    des = run_churn(cfg)
+    vec = simulate_churn(cfg)
+    ratio = vec.mean_out_bps / des.mean_out_bps
+    assert 0.6 <= ratio <= 1.5, (vec.summary(), des.summary())
+    assert abs(vec.one_hop_fraction - des.one_hop_fraction) <= 0.008
+
+
+@pytest.mark.slow
+def test_churn_plane_tracks_model_at_scale():
+    """The paper-scale cross-validation the DES cannot reach: at
+    n = 10^4 the measured per-peer bandwidth stays within 2x of
+    Eqs IV.5-IV.7 / Eq VII.1 for both protocols."""
+    for proto in ("d1ht", "calot"):
+        r = simulate_churn(ChurnConfig(n=10_000, s_avg=174 * 60,
+                                       duration=600, warmup=120,
+                                       protocol=proto, seed=2))
+        ratio = r.mean_out_bps / r.analytical_bps
+        assert 0.5 <= ratio <= 2.0, (proto, r.summary())
+        assert r.one_hop_fraction >= 0.99

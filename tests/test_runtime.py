@@ -122,6 +122,71 @@ def test_retune_window_anchored_to_construction():
     assert m.params.r == pytest.approx(9 / 100.0, rel=1e-6)
 
 
+def test_retune_late_burst_as_aggressive_as_early():
+    """Regression: the rate window was anchored to view construction
+    forever, so the estimate decayed toward 0 on a long-lived view and a
+    churn burst after a quiet day barely moved Theta.  With the sliding
+    window, a late burst must retune exactly as aggressively as an early
+    one (§IV-D: Theta must track the CURRENT rate)."""
+    t_a = [0.0]
+    m_early = Membership(now=lambda: t_a[0])
+    for i in range(8):
+        m_early.request_join(f"10.1.0.{i}", 7000 + i)
+    r_early = m_early.params.r
+
+    t_b = [0.0]
+    m_late = Membership(now=lambda: t_b[0])
+    for i in range(8):
+        m_late.request_join(f"10.1.0.{i}", 7000 + i)
+    t_b[0] = 86_400.0                    # a quiet day goes by
+    for i in range(8):
+        m_late.request_join(f"10.1.1.{i}", 7100 + i)
+    r_late = m_late.params.r
+    # lifetime-anchored estimate would be 16/86400 ~ 2e-4 events/s
+    assert r_late > 100.0 * (16 / 86_400.0)
+    assert r_late == pytest.approx(r_early, rel=0.25)
+
+
+def test_retune_rate_decays_after_burst():
+    """Events older than the sliding horizon drop out of the estimate."""
+    t = [0.0]
+    m = Membership(now=lambda: t[0])
+    for i in range(8):
+        m.request_join(f"10.1.0.{i}", 7000 + i)
+    r_burst = m.params.r
+    t[0] = Membership.RATE_HORIZON + 10.0
+    m.request_join("10.1.2.1", 7201)     # one straggler event
+    assert m.params.r < r_burst / 4      # burst aged out of the window
+
+
+def test_preemptible_restart_while_quarantined():
+    """A preemptible node that restarts BEFORE its T_q elapsed hits the
+    request_join path with its id already present (and masked) in the
+    shared state: the tracked slot must be reused — never duplicated —
+    and the quarantine clock must restart from the new incarnation."""
+    m, t = _mk(4)
+    nid = m.request_join("10.9.9.7", 9997, preemptible=True)
+    total0 = m.ring_state.total
+    events0 = m._events_seen
+
+    t[0] = 30.0                           # restart before T_q = 60 elapsed
+    nid2 = m.request_join("10.9.9.7", 9997, preemptible=True)
+    assert nid2 == nid
+    assert m.ring_state.total == total0   # no duplicate tracked entry
+    assert m.ring_state.is_quarantined(nid)
+    assert m.size() == 4                  # still masked out of ownership
+    assert m._events_seen == events0      # nothing disseminated
+
+    t[0] = 85.0   # original clock would have admitted at 60; restarted at 30
+    assert m.poll_quarantine() == []      # quarantine clock was reset
+    t[0] = 91.0
+    assert m.poll_quarantine() == [nid]   # admitted once, 61 s post-restart
+    assert m.size() == 5
+    assert m._events_seen == events0 + 1  # exactly one join event
+    assert not m.ring_state.is_quarantined(nid)
+    assert m.ring_state.total == total0
+
+
 def test_quarantine_member_masks_without_leave_event():
     m, t = _mk(8)
     nid = m.members()[3]
