@@ -1,0 +1,151 @@
+"""Request-latency benchmark: the §VII-D D1HT-vs-directory-server
+comparison (Figs 5-6), measured instead of asserted.
+
+For ring sizes n in {800..4000} (the paper's 400-node testbed sweep) and
+both CPU regimes (idle / 100%-busy co-scheduling) the measured plane
+(``repro.dht.latency_sim``) plays a closed-loop lookup workload:
+
+  * the load generator drives real batched lookups through
+    ``RingState.lookup`` (``ring_lookup_bucketed`` at scale) — the route
+    component is timed, not assumed;
+  * the directory server is an FCFS queue over the service rate measured
+    by SATURATING one local ``DirectoryWorker`` — the paper's Cluster-B
+    1,600-client methodology, so the saturation point is a measurement
+    of this host, not the hardcoded ``DSERVER_SAT_CLIENTS``;
+  * the stale-table retry fraction f' is measured per (n, protocol) by
+    the PR-4 vectorized churn plane, not a free parameter;
+  * every row carries the closed-form oracle evaluated AT the measured
+    parameters and the measured/model ratio (the cross-validation
+    ladder's latency rung, like BENCH_maintenance's sim/model column).
+
+n in {10^4..10^6} rows extend the sweep with the closed form anchored to
+the same measured parameters (``mode: model-extended``), mirroring how
+the paper could only model past its testbed.
+
+Emits BENCH_latency.json.  The CI gate checks ORDERINGS and RATIOS
+(D1HT ≈ dserver sub-saturation, dserver diverging past the measured
+saturation, Pastry ≥ 3x, measured/model within [0.7, 1.4]) — never
+absolute milliseconds, so the gate is runner-speed-neutral: a slower
+host measures a lower mu and the saturation point moves WITH it.
+
+Usage: PYTHONPATH=src python benchmarks/bench_latency.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.dht.latency_sim import (latency_point, measure_profile,
+                                   measured_retry_fraction,
+                                   model_extended_point)
+
+SIZES = (800, 1600, 2400, 3200, 4000)
+
+
+def _fmt(row: dict) -> str:
+    s = row["systems"]
+    if row["mode"] == "model-extended":
+        return (f"n={row['n']:>8} {'busy' if row['busy'] else 'idle'} "
+                f"[model] d1ht={s['d1ht']['model_ms']:>7}ms "
+                f"dserver={s['dserver']['model_ms']:>10}ms "
+                f"pastry={s['pastry']['model_ms']:>7}ms")
+    return (f"n={row['n']:>8} {'busy' if row['busy'] else 'idle'} "
+            f"util={row['dserver_util']:>5} "
+            f"d1ht={s['d1ht']['p50_ms']:>6}/{s['d1ht']['p99_ms']:>7}ms "
+            f"dserver={s['dserver']['p50_ms']:>8}/{s['dserver']['p99_ms']:>9}ms "
+            f"pastry={s['pastry']['p50_ms']:>6}ms "
+            f"ds/d1ht={s['dserver']['mean_ms'] / s['d1ht']['mean_ms']:>6.1f}x "
+            f"ratios d1ht={s['d1ht']['ratio_measured_over_model']} "
+            f"ds={s['dserver']['ratio_measured_over_model']}")
+
+
+def run(full: bool = False, *, out: str = "BENCH_latency.json",
+        sizes=None, requests: int = None, window_s: float = None,
+        seed: int = 1) -> dict:
+    """Harness entry point (benchmarks.run registers this).
+
+    ``full`` uses the committed-JSON settings (200k sampled requests per
+    system, a 10 s queue window, 600 s churn windows, the 10^4..10^6
+    model extension); quick mode shrinks everything for the CI smoke but
+    keeps the same measured methodology, so the gate's ordering/ratio
+    checks apply to both."""
+    sizes = tuple(sizes) if sizes else SIZES
+    requests = requests or (200_000 if full else 20_000)
+    window_s = window_s or (10.0 if full else 2.0)
+    churn_duration = 600.0 if full else 240.0
+    churn_warmup = 120.0 if full else 60.0
+    ext_sizes = (10**4, 10**5, 10**6) if full else (10**4,)
+
+    t0 = time.perf_counter()
+    profile = measure_profile(requests=25_000 if full else 10_000,
+                              repeats=7 if full else 5)
+    print(f"measured profile ({time.perf_counter() - t0:.1f}s): "
+          f"route={profile.route_us_per_key:.2f}us/key  "
+          f"dserver service={profile.dserver_service_us:.2f}us "
+          f"(mu={profile.dserver_mu:,.0f}/s -> saturates at "
+          f"{profile.saturation_clients():,.0f} clients x 30 lkp/s)  "
+          f"peer service={profile.peer_service_us:.2f}us", flush=True)
+
+    # adaptive knee coverage: on a runner whose worker is fast enough
+    # that the standard sweep never crosses its measured saturation
+    # point, extend the sweep — the Fig-5a divergence claim must stay
+    # testable (and CI-gated) at ANY runner speed
+    sat_n = int(-(-1.3 * profile.saturation_clients() // 400)) * 400
+    if sat_n > max(sizes):
+        sizes = (*sizes, sat_n)
+        print(f"sweep extended to n={sat_n}: the measured saturation "
+              f"point sits above the standard sizes", flush=True)
+
+    results = []
+    for n in (*sizes, *ext_sizes):
+        # f' is regime-independent (staleness comes from dissemination,
+        # not CPU load): measure once per (n, protocol), reuse for both
+        fp = {p: measured_retry_fraction(
+            n, protocol=p, duration=churn_duration, warmup=churn_warmup,
+            seed=seed) for p in ("d1ht", "calot")}
+        for busy in (False, True):
+            if n in sizes:
+                row = latency_point(n, busy=busy, profile=profile,
+                                    fprime=fp, window_s=window_s,
+                                    requests=requests, seed=seed)
+            else:
+                row = model_extended_point(n, busy=busy, profile=profile,
+                                           fprime=fp, window_s=window_s)
+            results.append(row)
+            print(_fmt(row), flush=True)
+
+    payload = {
+        "benchmark": "latency",
+        "mode": "full" if full else "quick",
+        "lookup_rate_per_client": 30.0,
+        "window_s": window_s,
+        "requests_per_system": requests,
+        "profile": {
+            "route_us_per_key": round(profile.route_us_per_key, 3),
+            "dserver_service_us": round(profile.dserver_service_us, 3),
+            "dserver_mu_per_s": round(profile.dserver_mu, 1),
+            "saturation_clients": round(profile.saturation_clients(), 1),
+            "peer_service_us": round(profile.peer_service_us, 3),
+            "table_n": profile.table_n,
+        },
+        "results": results,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_latency.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="short windows + fewer samples (CI smoke)")
+    ap.add_argument("--sizes", type=int, nargs="+", default=None)
+    args = ap.parse_args()
+    run(full=not args.quick, out=args.out, sizes=args.sizes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,16 +1,45 @@
 """Figs. 5-6: lookup latency — single-hop DHTs vs Pastry vs a directory
-server, idle and 100%-CPU nodes."""
-from repro.dht.latency import latency_sweep
+server, idle and 100%-CPU nodes.
 
-from .common import emit, timed
+Since the measured request-latency plane landed (DESIGN.md §9) this
+figure runs the closed-loop generator with a measured service profile —
+the closed-form ``latency_sweep`` values ride along as the oracle
+column.  ``--full`` additionally lets f' emerge from the churn plane
+(measured ONCE per n — staleness is regime-independent — and reused for
+idle and busy); quick mode uses the paper's nominal fractions to stay a
+seconds-long smoke (bench_latency.py is the committed-artifact run).
+"""
+from repro.dht.latency_sim import (latency_point, measure_profile,
+                                   measured_retry_fraction)
+
+from .common import emit
 
 
 def run(full: bool = False) -> None:
     sizes = [800, 1600, 2400, 3200, 4000]
+    requests = 100_000 if full else 10_000
+    profile = measure_profile(requests=20_000 if full else 10_000)
+    emit("fig5/profile", 0.0,
+         f"mu={profile.dserver_mu:.0f}/s "
+         f"sat={profile.saturation_clients():.0f}clients "
+         f"route={profile.route_us_per_key:.2f}us/key "
+         f"peer_svc={profile.peer_service_us:.2f}us")
+    rows = {False: [], True: []}
+    for n in sizes:
+        fp = {p: measured_retry_fraction(n, protocol=p)
+              for p in ("d1ht", "calot")} if full else \
+            {"d1ht": 0.01, "calot": 0.012}
+        for busy in (False, True):
+            rows[busy].append(latency_point(
+                n, busy=busy, profile=profile, fprime=fp,
+                requests=requests, window_s=2.0))
     for busy in (False, True):
-        pts = latency_sweep(sizes, busy=busy, nodes=400)
-        for n, p in pts.items():
-            emit(f"fig5/{'busy' if busy else 'idle'}/n={n}", 0.0,
-                 f"d1ht={p.d1ht_ms:.3f}ms calot={p.calot_ms:.3f}ms "
-                 f"pastry={p.pastry_ms:.3f}ms dserver={p.dserver_ms:.3f}ms "
-                 f"dserver/d1ht={p.dserver_ms/p.d1ht_ms:.1f}x")
+        for r in rows[busy]:
+            s = r["systems"]
+            emit(f"fig5/{'busy' if busy else 'idle'}/n={r['n']}", 0.0,
+                 f"d1ht={s['d1ht']['p50_ms']:.3f}ms "
+                 f"calot={s['calot']['p50_ms']:.3f}ms "
+                 f"pastry={s['pastry']['p50_ms']:.3f}ms "
+                 f"dserver={s['dserver']['p50_ms']:.3f}ms "
+                 f"dserver/d1ht={s['dserver']['mean_ms'] / s['d1ht']['mean_ms']:.1f}x "
+                 f"model_ratio={s['d1ht']['ratio_measured_over_model']}")

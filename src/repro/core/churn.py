@@ -90,6 +90,14 @@ class ChurnResult:
     mean_ack_s: float = 0.0       # vectorized plane only (0.0 from the DES)
     p99_ack_s: float = 0.0
 
+    @property
+    def stale_fraction(self) -> float:
+        """Expected fraction of routing-table entries a random lookup
+        finds stale (1 - one-hop fraction) — the f' the request-latency
+        plane consumes, measured rather than assumed (paper §IV-D ties
+        lookup retries to exactly this staleness)."""
+        return max(0.0, 1.0 - self.one_hop_fraction)
+
     def summary(self) -> Dict[str, float]:
         return {
             "n": self.cfg.n,

@@ -1,14 +1,20 @@
 """Protocol-level DHT implementations: D1HT, 1h-Calot, latency models.
 
 ``des`` is a deterministic discrete-event network; ``experiment`` drives
-the paper's §VII churn methodology over it.
+the paper's §VII churn methodology over it.  ``latency`` is the
+closed-form Figs-5/6 oracle; ``latency_sim`` is its measured twin
+(DESIGN.md §9).
 """
 from .calot_node import CalotPeer
 from .d1ht_node import D1HTPeer
 from .des import LanDelay, SimNet, WanDelay
 from .experiment import ChurnConfig, ChurnResult, run_churn
+from .latency_sim import (ServiceProfile, latency_experiment,
+                          measure_profile, measured_retry_fraction)
 
 __all__ = [
     "CalotPeer", "D1HTPeer", "LanDelay", "SimNet", "WanDelay",
     "ChurnConfig", "ChurnResult", "run_churn",
+    "ServiceProfile", "latency_experiment", "measure_profile",
+    "measured_retry_fraction",
 ]

@@ -135,8 +135,16 @@ class SimNet:
 
         ``acked=True`` models the per-message acknowledgment (v_a bits from
         dst back to src) without a separate queue event.
+
+        The metering decision is captured HERE, at send time, and applied
+        to every leg of the exchange: a datagram in flight across the
+        warmup->measurement boundary used to meter its recv and ack but
+        not its send (and the converse at window close), biasing the
+        §VII-A accounting at the window edges.  A datagram now counts
+        all-or-nothing with its acks.
         """
-        if self.metering:
+        metered = self.metering
+        if metered:
             m = self.meters[src]
             m.send(bits, maintenance)
         if not self.is_alive(dst):
@@ -147,7 +155,7 @@ class SimNet:
             peer = self.peers.get(dst)
             if peer is None or not peer.alive:
                 return
-            if self.metering:
+            if metered:
                 self.meters[dst].recv(bits)
                 if acked:
                     self.meters[dst].send(V_A_BITS, maintenance)

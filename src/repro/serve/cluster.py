@@ -28,6 +28,7 @@ the loop, turning RingState into an end-to-end serve plane:
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -66,6 +67,39 @@ class SessionRecord:
                                np.asarray(self.generated, np.int32)])
 
 
+@dataclass
+class RequestTrace:
+    """Per-request wall-clock breakdown through the serve path (all in
+    microseconds) — the measured request-latency plane's serve-side leg
+    (DESIGN.md §9):
+
+      * ``route_us``  — owner resolution (replica_set successor walks at
+        submit and on every migration);
+      * ``queue_us``  — capacity probing plus any time the session spent
+        stranded waiting for a replica_set slot to free;
+      * ``decode_us`` — prefill(s), including migration re-prefills, plus
+        this session's share of every decode round it took a token from.
+    """
+
+    submitted_ns: int = 0
+    completed_ns: int = 0
+    queue_us: float = 0.0
+    route_us: float = 0.0
+    decode_us: float = 0.0
+    _stranded_ns: int = 0          # transient: set while awaiting re-home
+
+    @property
+    def done(self) -> bool:
+        return self.completed_ns > 0
+
+    @property
+    def total_us(self) -> float:
+        """Submit -> completion wall time (in-flight sessions read 'so
+        far')."""
+        end = self.completed_ns or time.perf_counter_ns()
+        return (end - self.submitted_ns) / 1e3
+
+
 class ServeCluster:
     """Cluster-wide serve plane: replicas keyed by ring node, sessions
     migrated on churn, quarantined nodes proxying as gateways."""
@@ -85,6 +119,7 @@ class ServeCluster:
         self.supervisor = ReplicaSupervisor(membership)
         self.replicas: Dict[int, Replica] = {}
         self.sessions: Dict[str, SessionRecord] = {}
+        self.traces: Dict[str, RequestTrace] = {}
         self.proxied: Dict[int, int] = {}      # gateway node -> proxy count
         self.migrated_sessions = 0
         self.stranded = 0                  # handoff attempts deferred on
@@ -141,12 +176,14 @@ class ServeCluster:
             raise ValueError("prompt + max_new_tokens exceeds max_len")
         if via is not None and self.state.is_quarantined(via):
             self.proxied[via] = self.proxied.get(via, 0) + 1
+        t_sub = time.perf_counter_ns()
         key = session_key(req.session_id)
         # host-side owner-first successor list (no device dispatch for a
         # single key); admission spills down the replica_set exactly like
         # migration does, so a hot arc fills its group before rejecting
         group = [int(p) for p in self.state.replica_set(key,
                                                         self.replication)]
+        t_route = time.perf_counter_ns()
         owner = next((n for n in group if self._has_capacity(n)), None)
         if owner is None:
             raise RuntimeError(
@@ -155,7 +192,14 @@ class ServeCluster:
         rec = SessionRecord(req.session_id, key, np.asarray(req.prompt,
                                                             np.int32),
                             req.max_new_tokens, owner=owner)
+        t_queue = time.perf_counter_ns()
         tok = self._replica_for(owner).admit(req)
+        t_admit = time.perf_counter_ns()
+        self.traces[req.session_id] = RequestTrace(
+            submitted_ns=t_sub,
+            route_us=(t_route - t_sub) / 1e3,
+            queue_us=(t_queue - t_route) / 1e3,
+            decode_us=(t_admit - t_queue) / 1e3)
         self.sessions[req.session_id] = rec
         self._push_token(rec, tok)
         return tok
@@ -164,6 +208,9 @@ class ServeCluster:
         rec.generated.append(tok)
         if len(rec.generated) >= rec.max_new_tokens:
             rec.done = True
+            trace = self.traces.get(rec.session_id)
+            if trace is not None and not trace.done:
+                trace.completed_ns = time.perf_counter_ns()
             rep = self.replicas.get(rec.owner)
             if rep is not None:
                 rep.evict(rec.session_id)
@@ -176,9 +223,14 @@ class ServeCluster:
         out: Dict[str, int] = {}
         for node in list(self.replicas):
             rep = self.replicas[node]
-            for sid, tok in rep.decode_round().items():
-                rec = self.sessions[sid]
-                self._push_token(rec, tok)
+            t0 = time.perf_counter_ns()
+            toks = rep.decode_round()
+            share_us = (time.perf_counter_ns() - t0) / 1e3 / max(len(toks), 1)
+            for sid, tok in toks.items():
+                trace = self.traces.get(sid)
+                if trace is not None:
+                    trace.decode_us += share_us
+                self._push_token(self.sessions[sid], tok)
                 out[sid] = tok
         return out
 
@@ -224,8 +276,12 @@ class ServeCluster:
         moved = 0
         complete = True
         for rec in (r for r, h in zip(live, hit) if h):
+            t0 = time.perf_counter_ns()
             group = [int(p) for p in self.state.replica_set(
                 rec.key, self.replication)]
+            trace = self.traces.get(rec.session_id)
+            if trace is not None:
+                trace.route_us += (time.perf_counter_ns() - t0) / 1e3
             if group[0] == rec.owner and self._session_resident(rec):
                 continue    # still primary AND its slot is really there
                 # (a bare owner-id match is not enough: a stranded
@@ -237,6 +293,8 @@ class ServeCluster:
             except RuntimeError:            # replica_set full right now
                 self.stranded += 1
                 complete = False
+                if trace is not None and not trace._stranded_ns:
+                    trace._stranded_ns = time.perf_counter_ns()
         if complete:
             self._seen_version = target_version
         return moved
@@ -260,8 +318,15 @@ class ServeCluster:
             raise RuntimeError(
                 f"no capacity in the {len(group)}-way replica set for "
                 f"session {rec.session_id}")
+        t0 = time.perf_counter_ns()
         tok = self._replica_for(new_owner).admit(
             Request(rec.session_id, rec.transcript, rec.max_new_tokens))
+        trace = self.traces.get(rec.session_id)
+        if trace is not None:
+            trace.decode_us += (time.perf_counter_ns() - t0) / 1e3
+            if trace._stranded_ns:          # waited for capacity to free
+                trace.queue_us += (t0 - trace._stranded_ns) / 1e3
+                trace._stranded_ns = 0
         if resident:                        # clean handoff: free the slot
             self.replicas[rec.owner].evict(rec.session_id)
         rec.owner = new_owner
@@ -270,6 +335,31 @@ class ServeCluster:
         self._push_token(rec, tok)
 
     # -- observability -----------------------------------------------------------
+    def latency_report(self) -> Dict[str, float]:
+        """Serve-path request-latency distribution with the queue/route/
+        decode breakdown (completed sessions only), µs.  The measured
+        twin of the request plane's network-side accounting: BENCH
+        latency rows report lookup latency, this reports what the serve
+        path adds on top of the route."""
+        done = [t for t in self.traces.values() if t.done]
+        if not done:
+            return {"completed": 0}
+        tot = np.array([t.total_us for t in done])
+        return {
+            "completed": len(done),
+            "total_us_mean": round(float(tot.mean()), 1),
+            "total_us_p50": round(float(np.percentile(tot, 50)), 1),
+            "total_us_p99": round(float(np.percentile(tot, 99)), 1),
+            "queue_us_mean": round(
+                float(np.mean([t.queue_us for t in done])), 1),
+            "route_us_mean": round(
+                float(np.mean([t.route_us for t in done])), 1),
+            "decode_us_mean": round(
+                float(np.mean([t.decode_us for t in done])), 1),
+            "router_route_us_per_key": round(
+                self.router.route_us_per_key, 2),
+        }
+
     def stats(self) -> Dict[str, int]:
         """Serve-plane counters plus the routing plane's device-traffic
         accounting: the router resolves through ``RingState.lookup``

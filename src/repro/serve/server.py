@@ -16,6 +16,7 @@ proxy requests — the paper's gateway mechanism (§V); see
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import Dict, List, Tuple
@@ -52,6 +53,10 @@ class SessionRouter:
         # no event subscription needed: the device table refreshes
         # lazily off the shared state's version
         self.state: RingState = membership.ring_state
+        # per-batch route-latency accounting (request-latency plane §9)
+        self.route_ns = 0
+        self.route_batches = 0
+        self.route_keys = 0
 
     @property
     def uploads(self) -> int:
@@ -59,11 +64,21 @@ class SessionRouter:
         routed against — asserted by the serve acceptance test)."""
         return self.state.upload_count
 
+    @property
+    def route_us_per_key(self) -> float:
+        """Measured mean on-device resolution cost per routed key."""
+        return self.route_ns / 1e3 / max(self.route_keys, 1)
+
     def route(self, session_ids: List[str]) -> List[int]:
         keys = np.fromiter(
             (session_key(s) for s in session_ids),
             np.uint64, len(session_ids))
-        return [int(p) for p in self.state.lookup(keys)]
+        t0 = time.perf_counter_ns()
+        owners = self.state.lookup(keys)
+        self.route_ns += time.perf_counter_ns() - t0
+        self.route_batches += 1
+        self.route_keys += len(session_ids)
+        return [int(p) for p in owners]
 
 
 def session_key(session_id: str) -> int:
@@ -169,26 +184,46 @@ class Replica:
     def admit(self, req: Request) -> int:
         """Prefill a prompt into a free slot (single-sequence batch into a
         fresh slot-shaped cache, then written back slot-granular) and
-        return the first generated token."""
+        return the first generated token.
+
+        Any prefill failure (bad tokens, OOM, a kernel error) rolls the
+        slot allocation back: the session entry and the free-list slot
+        used to be committed BEFORE prefill ran, so a failed admit left a
+        phantom session with ``active=False`` and the next
+        ``decode_round`` raised KeyError for every caller."""
         s = len(req.prompt)
         if s >= self.max_len:   # validate BEFORE allocating: a rejected
             # admit must not leak the slot or leave a phantom session
             raise ValueError(f"prompt of {s} tokens >= max_len {self.max_len}")
+        fresh = False
         if req.session_id in self.sessions:
             slot = self.sessions[req.session_id]
         elif self._free:
             slot = self._free.pop()
             self.sessions[req.session_id] = slot
+            fresh = True
         else:
             raise RuntimeError("replica full")
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
-        one = self.model.init_cache(1, self.max_len)
-        logits, one = self._prefill(self.params, batch, one)
-        self._write_slot(one, slot)
-        self.lengths[slot] = s
-        tok = int(jnp.argmax(logits[0]))
-        self.tokens[slot, 0] = tok
-        self.active[slot] = True
+        try:
+            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+            one = self.model.init_cache(1, self.max_len)
+            logits, one = self._prefill(self.params, batch, one)
+            # the commit stays inside the try: with async dispatch a
+            # device-side prefill failure (OOM, kernel error) surfaces
+            # only HERE, when the result is first materialized
+            self._write_slot(one, slot)
+            self.lengths[slot] = s
+            tok = int(jnp.argmax(logits[0]))
+            self.tokens[slot, 0] = tok
+            self.active[slot] = True
+        except BaseException:
+            if fresh:
+                del self.sessions[req.session_id]
+                self._free.append(slot)
+                self.active[slot] = False
+                self.lengths[slot] = 0
+                self.tokens[slot, 0] = 0
+            raise
         return tok
 
     def _write_slot(self, one_cache, slot: int) -> None:

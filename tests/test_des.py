@@ -8,7 +8,7 @@ from repro.core.tuning import EdraParams
 from repro.dht import ChurnConfig, run_churn
 from repro.dht.calot_node import CalotPeer
 from repro.dht.d1ht_node import D1HTPeer
-from repro.dht.des import LanDelay, SimNet
+from repro.dht.des import LanDelay, SimNet, SimPeer
 
 
 def _static_net(cls, n, seed=0):
@@ -26,6 +26,58 @@ def _static_net(cls, n, seed=0):
                      (lambda q: (lambda: q.start()))(p))
     net.run_until(40)
     return net, params, ids
+
+
+class _SinkPeer(SimPeer):
+    """Minimal live peer: receives datagrams, does nothing."""
+
+    def start(self):
+        self.alive = True
+
+    def stop(self, *, crash):
+        self.alive = False
+
+
+def _two_peer_net(seed=3):
+    net = SimNet(LanDelay(), seed=seed)
+    for pid in (1, 2):
+        p = _SinkPeer(pid, net)
+        p.alive = True
+        net.add_peer(p)
+    return net
+
+
+def test_metering_captured_at_send_time_warmup_edge():
+    """Regression (ISSUE 5): ``SimNet.send`` read ``self.metering`` at
+    DELIVERY time inside the deliver closure, so a datagram straddling
+    the warmup->measurement boundary metered its recv and ack without
+    its send — §VII-A accounting was biased at the window edge.  A
+    warmup datagram delivered inside the window must now count
+    nowhere."""
+    net = _two_peer_net()
+    net.metering = False                  # still warming up at send time
+    net.send(1, 2, 320, "maint")
+    net.metering = True                   # window opens mid-flight
+    net.run_until(1.0)
+    assert net.meters[2].in_bits == 0, "recv leg metered without its send"
+    assert net.meters[2].out_bits == 0, "ack leg metered without its send"
+    assert net.meters[1].in_bits == 0
+    assert net.meters[1].out_bits == 0
+
+
+def test_metering_sticks_through_window_close():
+    """The converse edge: a datagram sent INSIDE the window but
+    delivered after it closes keeps its recv/ack legs — the exchange
+    belongs, whole, to the window that sent it."""
+    net = _two_peer_net()
+    net.metering = True
+    net.send(1, 2, 320, "maint")
+    net.metering = False                  # window closes mid-flight
+    net.run_until(1.0)
+    assert net.meters[1].out_bits == 320
+    assert net.meters[2].in_bits == 320
+    assert net.meters[2].out_bits == 288  # the v_a ack
+    assert net.meters[1].in_bits == 288
 
 
 def test_lan_delay_mean_matches_docstring():

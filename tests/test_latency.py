@@ -1,5 +1,6 @@
 """Latency model checks (paper §VII-D, Figs. 5-6)."""
-from repro.dht.latency import dserver_ms, latency_sweep, pastry_ms, single_hop_ms
+from repro.dht.latency import (DSERVER_SAT_CLIENTS, dserver_ms,
+                               latency_sweep, pastry_ms, single_hop_ms)
 
 
 def test_c6_dserver_saturates_single_hop_flat():
@@ -18,7 +19,52 @@ def test_pastry_multihop_worse():
     assert p > 3 * s                      # log4(1600) ~ 5.3 hops
 
 
+
 def test_busy_degrades_with_peers_per_node_not_n():
     a = single_hop_ms(busy=True, peers_per_node=4)
     b = single_hop_ms(busy=True, peers_per_node=8)
     assert b > a
+
+
+def test_dserver_divergence_grows_past_saturation():
+    """Regression (ISSUE 5): the old ``min(rho, 0.999)`` clamp froze
+    EVERY past-saturation point at the same ~5 ms — n=4000 was
+    indistinguishable from n=10^6 and Fig 5a's blow-up was
+    unrepresentable.  Finite-window queue growth must keep the
+    divergence monotone in n."""
+    ms = [dserver_ms(n, busy=False, peers_per_node=n / 400)
+          for n in (4000, 10_000, 100_000, 1_000_000)]
+    assert ms == sorted(ms), ms
+    assert ms[1] > 3 * ms[0]
+    assert ms[-1] > 100 * ms[0]
+
+
+def test_dserver_knee_is_continuous_not_cliff():
+    """Crossing the saturation point by 1% must not jump by an order of
+    magnitude: the knee residual term keeps the model continuous where
+    the measured closed-loop generator is also smooth."""
+    mu = DSERVER_SAT_CLIENTS * 30.0
+    lo = dserver_ms(int(0.99 * DSERVER_SAT_CLIENTS), busy=False,
+                    peers_per_node=8, mu=mu)
+    hi = dserver_ms(int(1.01 * DSERVER_SAT_CLIENTS), busy=False,
+                    peers_per_node=8, mu=mu)
+    assert hi > lo
+    assert hi < 10 * lo
+
+
+def test_dserver_measured_mu_moves_the_knee():
+    """The saturation point follows the MEASURED worker rate — the whole
+    point of replacing the hardcoded DSERVER_SAT_CLIENTS: with a worker
+    twice as fast, n=4000 is comfortably sub-saturation again."""
+    fast = dserver_ms(4000, busy=False, peers_per_node=10,
+                      mu=2 * DSERVER_SAT_CLIENTS * 30.0)
+    slow = dserver_ms(4000, busy=False, peers_per_node=10)
+    assert fast < 1.0 < slow
+
+
+def test_latency_sweep_accepts_measured_fractions():
+    """The oracle evaluated at churn-emergent f' (instead of the nominal
+    0.01) shifts by exactly the retry-penalty weight."""
+    a = latency_sweep([1600], busy=False, d1ht_f=0.0)[1600]
+    b = latency_sweep([1600], busy=False, d1ht_f=0.02)[1600]
+    assert abs((b.d1ht_ms - a.d1ht_ms) - 0.02 * 2.0) < 1e-9

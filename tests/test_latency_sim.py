@@ -1,0 +1,158 @@
+"""Measured request-latency plane (DESIGN.md §9): closed-loop queue
+calibration against queueing theory, system orderings, measured-vs-model
+agreement, and the saturation-measurement machinery."""
+import struct
+
+import numpy as np
+import pytest
+
+from repro.dht.latency_sim import (DirectoryWorker, PeerWorker,
+                                   ServiceProfile, closed_loop_fcfs,
+                                   latency_point,
+                                   measure_worker_service_us,
+                                   simulate_pastry, simulate_single_hop)
+
+# a synthetic profile pins the measured quantities so the tests are
+# deterministic and runner-speed-independent (the real measurement is
+# exercised separately below and by bench_latency)
+PROFILE = ServiceProfile(route_us_per_key=0.5, dserver_service_us=10.4,
+                         peer_service_us=9.0, table_n=4000, requests=0)
+FP = {"d1ht": 0.01, "calot": 0.012}
+
+
+# ---------------------------------------------------------------------------
+# closed-loop FCFS generator vs queueing theory
+# ---------------------------------------------------------------------------
+
+def test_closed_loop_matches_mdl_below_saturation():
+    """Sub-saturation the closed loop is an M/D/1 queue: mean sojourn =
+    S + S*rho/(2(1-rho))."""
+    rng = np.random.default_rng(0)
+    s = 10e-6
+    soj = closed_loop_fcfs(rng, clients=800, think_s=1 / 30.0,
+                           service_s=s, window_s=4.0)
+    rho = 800 * 30.0 * s
+    want = s + s * rho / (2 * (1 - rho))
+    assert soj.mean() == pytest.approx(want, rel=0.15)
+
+
+def test_closed_loop_saturated_hits_littles_law_cap():
+    """Past saturation the server never idles: throughput is 1/S and
+    Little's law pins the mean sojourn at N*S - Z."""
+    rng = np.random.default_rng(1)
+    s = 10e-6
+    soj = closed_loop_fcfs(rng, clients=4000, think_s=1 / 30.0,
+                           service_s=s, window_s=4.0)
+    cap = 4000 * s - 1 / 30.0 + s
+    assert soj.mean() == pytest.approx(cap, rel=0.2)
+    assert soj.size == pytest.approx(4.0 / s, rel=0.1)   # service-bound
+
+
+def test_closed_loop_empty_window():
+    rng = np.random.default_rng(2)
+    out = closed_loop_fcfs(rng, clients=4, think_s=10.0, service_s=1e-6,
+                           window_s=0.001)
+    assert out.size == 0
+
+
+# ---------------------------------------------------------------------------
+# per-system simulators
+# ---------------------------------------------------------------------------
+
+def test_single_hop_retry_fraction_shows_in_the_mean():
+    rng = np.random.default_rng(3)
+    kw = dict(requests=60_000, service_us=9.0, busy_mult=1.0,
+              route_us_per_key=0.5)
+    base = simulate_single_hop(rng, retry_fraction=0.0, **kw)
+    retry = simulate_single_hop(rng, retry_fraction=0.05, **kw)
+    # each retry pays the 2 ms timeout + a second full attempt
+    assert (retry.mean() - base.mean()) * 1e3 == pytest.approx(
+        0.05 * (2.0 + 0.14 + 0.009), rel=0.25)
+
+
+def test_single_hop_flat_in_n_pastry_grows():
+    rng = np.random.default_rng(4)
+    kw = dict(requests=40_000, service_us=9.0, busy_mult=1.0)
+    p1600 = simulate_pastry(rng, n=1600, **kw)
+    p105 = simulate_pastry(rng, n=10**5, **kw)
+    s = simulate_single_hop(rng, retry_fraction=0.01,
+                            route_us_per_key=0.5, **kw)
+    assert p1600.mean() > 3 * s.mean()        # log4(1600) ~ 5.3 hops
+    assert p105.mean() > 1.4 * p1600.mean()   # and it grows with log n
+
+
+def test_latency_point_reproduces_fig5_shape():
+    """Sub-saturation: D1HT ~ dserver, every system within the
+    cross-validation ratio band.  Past the (synthetic) saturation
+    point: dserver diverges by >5x while D1HT stands still."""
+    sub = latency_point(800, busy=False, profile=PROFILE, fprime=FP,
+                        requests=20_000, window_s=2.0, drive_kernel=False,
+                        seed=1)
+    assert sub["sub_saturation"]
+    s = sub["systems"]
+    assert s["dserver"]["mean_ms"] < 1.5 * s["d1ht"]["mean_ms"]
+    for name in ("d1ht", "calot", "pastry", "dserver"):
+        assert 0.7 <= s[name]["ratio_measured_over_model"] <= 1.4, (
+            name, s[name])
+
+    sat = latency_point(4000, busy=False, profile=PROFILE, fprime=FP,
+                        requests=20_000, window_s=2.0, drive_kernel=False,
+                        seed=1)
+    assert not sat["sub_saturation"]
+    t = sat["systems"]
+    assert t["dserver"]["mean_ms"] > 5 * t["d1ht"]["mean_ms"]
+    assert t["d1ht"]["mean_ms"] == pytest.approx(s["d1ht"]["mean_ms"],
+                                                 rel=0.1)   # C1: flat
+
+
+def test_latency_point_drives_the_real_lookup_kernel():
+    """With ``drive_kernel=True`` the route component is measured off
+    real batched RingState lookups (bucketized at n >= threshold)."""
+    row = latency_point(2400, busy=False, profile=PROFILE, fprime=FP,
+                        requests=4096, window_s=0.5, drive_kernel=True,
+                        seed=2)
+    assert row["systems"]["d1ht"]["mean_ms"] > 0.1   # legs dominate
+    assert row["systems"]["d1ht"]["requests"] == 4096
+
+
+def test_busy_factor_inflates_both_planes_alike():
+    idle = latency_point(1600, busy=False, profile=PROFILE, fprime=FP,
+                         requests=20_000, window_s=1.0, drive_kernel=False)
+    busy = latency_point(1600, busy=True, profile=PROFILE, fprime=FP,
+                         requests=20_000, window_s=1.0, drive_kernel=False)
+    b, i = busy["systems"], idle["systems"]
+    assert b["d1ht"]["mean_ms"] > 1.2 * i["d1ht"]["mean_ms"]
+    # the ratio stays in band because model and sim share busy_factor
+    assert 0.7 <= b["d1ht"]["ratio_measured_over_model"] <= 1.4
+
+
+# ---------------------------------------------------------------------------
+# the measurement machinery itself
+# ---------------------------------------------------------------------------
+
+def test_directory_worker_resolves_the_successor():
+    ids = [100, 200, 300]
+    w = DirectoryWorker(ids)
+    from repro.core.ring import hash_id
+    reply = w.handle(b"abc")
+    key, owner = struct.unpack("!QQ", reply)
+    assert key == hash_id("session/abc")
+    import bisect
+    assert owner == ids[bisect.bisect_left(ids, key) % 3]
+
+
+def test_peer_worker_answers_from_local_store():
+    w = PeerWorker(entries=8)
+    (val,) = struct.unpack("!Q", w.handle(b"s3"))
+    assert val == 3
+    (miss,) = struct.unpack("!Q", w.handle(b"nope"))
+    assert miss == 0
+
+
+def test_saturation_measurement_returns_sane_service_time():
+    """The real measurement on this host: a saturated local worker must
+    land between 0.2 us (nothing measurable) and 1 ms (pathological) per
+    request — the bench gates everything else relatively."""
+    us = measure_worker_service_us(DirectoryWorker(list(range(1, 4001))),
+                                   requests=3000, repeats=1)
+    assert 0.2 < us < 1000.0

@@ -1,0 +1,149 @@
+"""Replica slot-engine interleavings (ISSUE 5 satellite): hypothesis
+property tests over admit/evict/decode_round sequences — including
+FAILING admits (bad tokens) and oversize rejections — with the slab
+invariants checked after every operation:
+
+  * slot conservation: the free list and the session slots partition the
+    slab (a slot is never leaked, never double-freed, never shared);
+  * phantom-session invariant: ``sessions.keys()`` ⊆ active slots after
+    ANY exception (the pre-fix admit left a phantom session whose slot
+    had ``active=False``, poisoning every later decode_round);
+  * evicted/free rows are zeroed (stale lengths used to survive).
+
+The hypothesis tests skip when hypothesis is absent (the runtime image
+bakes in jax + numpy only); the fixed-seed randomized twin below always
+runs and covers the same invariants.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.serve import Replica, Request
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+SLOTS = 3
+MAX_LEN = 24
+SIDS = ("a", "b", "c", "d")
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    cfg = get_smoke_config("qwen2.5-3b").with_overrides(dtype="float32")
+    model = Model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _check_invariants(rep: Replica) -> None:
+    owned = list(rep.sessions.values())
+    free = rep._free
+    assert len(free) == len(set(free)), "double-freed slot"
+    assert len(owned) == len(set(owned)), "two sessions share a slot"
+    assert not (set(free) & set(owned)), "slot both free and owned"
+    assert len(free) + len(owned) == rep.slots, "slot leaked"
+    for s in owned:
+        assert rep.active[s], "phantom session: owned slot inactive"
+    for s in free:
+        assert not rep.active[s]
+        assert rep.lengths[s] == 0, "stale length on a free slot"
+        assert rep.tokens[s, 0] == 0, "stale token on a free slot"
+
+
+def _run_ops(cfg, model, params, ops) -> None:
+    rep = Replica(model, slots=SLOTS, max_len=MAX_LEN)
+    rep.attach_params(params)
+    for op in ops:
+        kind = op[0]
+        if kind == "admit":
+            _, sid, plen, fail = op
+            if fail:
+                # bad tokens: fails INSIDE prefill, after validation
+                prompt = np.array(["tok"] * plen, dtype=object)
+            else:
+                prompt = (np.arange(plen) % cfg.vocab).astype(np.int32)
+            try:
+                rep.admit(Request(sid, prompt, max_new_tokens=8))
+            except RuntimeError:
+                assert rep.num_free == 0      # only a full replica rejects
+            except Exception:
+                assert fail, "healthy admit must not raise"
+        elif kind == "admit_oversize":
+            with pytest.raises(ValueError):
+                rep.admit(Request(op[1], np.zeros(MAX_LEN, np.int32)))
+        elif kind == "evict":
+            rep.evict(op[1])
+        else:                                 # decode round
+            out = rep.decode_round()
+            assert set(out) == set(rep.sessions)
+        _check_invariants(rep)
+
+
+def _op_list_from_rng(rng, length: int):
+    ops = []
+    for _ in range(length):
+        r = rng.integers(0, 10)
+        sid = SIDS[rng.integers(0, len(SIDS))]
+        if r < 5:
+            ops.append(("admit", sid, int(rng.integers(1, 7)),
+                        bool(rng.integers(0, 3) == 0)))
+        elif r < 7:
+            ops.append(("evict", sid))
+        elif r < 8:
+            ops.append(("admit_oversize", sid))
+        else:
+            ops.append(("decode",))
+    return ops
+
+
+def test_slot_engine_random_interleavings(model_params):
+    """Always-run twin of the hypothesis property (fixed seeds)."""
+    cfg, model, params = model_params
+    rng = np.random.default_rng(7)
+    for _ in range(12):
+        _run_ops(cfg, model, params, _op_list_from_rng(rng, 10))
+
+
+def test_full_replica_of_failed_admits_stays_usable(model_params):
+    """Saturate the slab through a mix of failures: the free list must
+    come back to full size via evictions, never shrink through leaks."""
+    cfg, model, params = model_params
+    rep = Replica(model, slots=SLOTS, max_len=MAX_LEN)
+    rep.attach_params(params)
+    for i in range(SLOTS + 2):                # overfill on purpose
+        try:
+            rep.admit(Request(f"s{i}", np.arange(3, dtype=np.int32)))
+        except RuntimeError:
+            pass
+        with pytest.raises(Exception):
+            rep.admit(Request(f"bad{i}", np.array(["x"], dtype=object)))
+        _check_invariants(rep)
+    assert rep.num_active == SLOTS
+    for i in range(SLOTS):
+        rep.evict(f"s{i}")
+        _check_invariants(rep)
+    assert rep.num_free == SLOTS
+
+
+if HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.one_of(
+            st.tuples(st.just("admit"), st.sampled_from(SIDS),
+                      st.integers(1, 6), st.booleans()),
+            st.tuples(st.just("evict"), st.sampled_from(SIDS)),
+            st.tuples(st.just("admit_oversize"), st.sampled_from(SIDS)),
+            st.tuples(st.just("decode")),
+        ), max_size=12)
+
+    @settings(max_examples=25, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(ops=_ops)
+    def test_slot_engine_interleavings_hypothesis(model_params, ops):
+        cfg, model, params = model_params
+        _run_ops(cfg, model, params, ops)

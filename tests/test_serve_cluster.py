@@ -425,6 +425,50 @@ def test_rejected_admit_leaks_no_slot(smoke_model):
     assert rep.decode_round() == {}        # no phantom session decodes
 
 
+def test_admit_prefill_failure_rolls_back_slot_allocation(smoke_model):
+    """Regression (ISSUE 5): the slot was popped and the session
+    registered BEFORE prefill ran, so a prefill failure (bad tokens,
+    OOM) left a phantom session with ``active=False`` — and the next
+    ``decode_round`` raised KeyError in ``row_of[slot]`` for every
+    caller.  A failed admit must roll the allocation back completely."""
+    cfg, model, params = smoke_model
+    rep = Replica(model, slots=2, max_len=16)
+    rep.attach_params(params)
+    with pytest.raises(Exception):
+        # bad tokens: len() passes validation, prefill's jnp.asarray
+        # rejects the object dtype — the failure happens POST-allocation
+        rep.admit(Request("phantom", np.array(["tok", "tok"], object)))
+    assert rep.sessions == {}, "phantom session survived a failed admit"
+    assert rep.num_free == 2, "failed admit leaked its slot"
+    # the replica must still serve: healthy admit + decode round (the
+    # pre-fix engine KeyError'd here for every live session)
+    tok = rep.admit(Request("ok", np.arange(4, dtype=np.int32) % cfg.vocab))
+    out = rep.decode_round()
+    assert set(out) == {"ok"} and isinstance(tok, int)
+
+
+def test_serve_path_latency_traces_breakdown(smoke_model):
+    """Every completed session reports a queue+route+decode wall-clock
+    breakdown, and the cluster aggregates them (request-latency plane
+    §9: the serve path's leg of the measured experiment)."""
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(4, t)
+    cluster = ServeCluster(m, model, params, slots=4, max_len=48)
+    for r in _requests(cfg, 6, max_new=4):
+        cluster.submit(r)
+    cluster.run()
+    report = cluster.latency_report()
+    assert report["completed"] == 6
+    assert report["total_us_p50"] > 0 and report["decode_us_mean"] > 0
+    for trace in cluster.traces.values():
+        assert trace.done
+        assert trace.decode_us > 0          # prefill + decode rounds
+        assert trace.route_us >= 0 and trace.queue_us >= 0
+        # parts are measured inside the submit->done window
+        assert trace.total_us * 1.5 + 100.0 > trace.decode_us
+
+
 def test_stranded_sessions_rehome_when_capacity_frees(smoke_model):
     """If every replica_set member is full at failure time, the affected
     sessions stay flagged (not silently stranded on the dead owner) and
