@@ -115,9 +115,16 @@ def run(full: bool = False, *, out: str = "BENCH_latency.json",
             results.append(row)
             print(_fmt(row), flush=True)
 
+    try:
+        from .common import provenance
+    except ImportError:
+        from common import provenance
+    prov = provenance()
     payload = {
         "benchmark": "latency",
-        "mode": "full" if full else "quick",
+        "window": "full" if full else "quick",
+        "mode": prov["mode"],
+        "provenance": prov,
         "lookup_rate_per_client": 30.0,
         "window_s": window_s,
         "requests_per_system": requests,

@@ -82,9 +82,16 @@ def run(full: bool = False, *, out: str = "BENCH_maintenance.json",
               f"onehop={row['d1ht']['one_hop_fraction']}  "
               f"sim={row['d1ht']['events_per_s']} ev/s", flush=True)
 
+    try:
+        from .common import provenance
+    except ImportError:
+        from common import provenance
+    prov = provenance(interpret)
     payload = {
         "benchmark": "maintenance",
-        "mode": "full-window" if full else "quick",
+        "window": "full-window" if full else "quick",
+        "mode": prov["mode"],
+        "provenance": prov,
         "results": results,
     }
     with open(out, "w") as f:

@@ -27,6 +27,11 @@ import time
 
 import numpy as np
 
+try:
+    from .common import ensure_tuned, provenance, time_best_of
+except ImportError:           # standalone: python benchmarks/bench_ring_lookup.py
+    from common import ensure_tuned, provenance, time_best_of
+
 from repro.core.edra import Event
 from repro.core.ringstate import RingState
 
@@ -50,18 +55,13 @@ def _churn_batch(state: RingState, batch: int) -> list:
 
 
 def bench_lookup(state: RingState, q: int, reps: int,
-                 interpret: bool) -> float:
-    """Best-rep throughput (timeit practice): the min per-rep wall time
-    is the hardware's answer; means fold scheduler pauses and GC into
-    the number and make the CI regression gate flap."""
+                 interpret) -> float:
+    """Best-rep throughput via time_best_of (min per-rep wall time is
+    the hardware's answer; means make the CI regression gate flap)."""
     keys = RNG.integers(0, 2**64, size=q, dtype=np.uint64)
-    state.lookup(keys, interpret=interpret)  # warmup: upload + jit compile
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        state.lookup(keys, interpret=interpret)
-        best = min(best, time.perf_counter() - t0)
-    return q / best
+    us = time_best_of(lambda: state.lookup(keys, interpret=interpret),
+                      reps=reps, warmup=1)   # warmup: upload + jit compile
+    return q / (us / 1e6)
 
 
 def bench_updates(state: RingState, batch: int, reps: int) -> float:
@@ -89,9 +89,11 @@ def bench_delta_traffic(state: RingState, batch: int, reps: int,
 
 
 def run(full: bool = False, *, out: str = "BENCH_ring_lookup.json",
-        interpret: bool = True, sizes=None) -> list:
+        interpret=None, sizes=None) -> list:
     """Harness entry point (benchmarks.run registers this): quick sizes
-    unless ``full``; also reused by the __main__ CLI below."""
+    unless ``full``; also reused by the __main__ CLI below.
+    ``interpret=None`` autodetects (compiled on TPU, interpret on CPU)."""
+    ensure_tuned()
     qbatch = 4096 if full else 1024
     reps = 5 if full else 2
     # lookups are µs-scale per batch once bucketized: time enough of
@@ -137,9 +139,11 @@ def run(full: bool = False, *, out: str = "BENCH_ring_lookup.json",
               f"delta={delta_bytes:>10.0f} B/batch "
               f"(full={full_bytes}) path={row['lookup_path']}", flush=True)
 
+    prov = provenance(interpret)
     payload = {
         "benchmark": "ring_lookup",
-        "mode": "pallas-interpret-cpu" if interpret else "pallas-compiled",
+        "mode": prov["mode"],
+        "provenance": prov,
         "results": results,
     }
     with open(out, "w") as f:
@@ -154,12 +158,18 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer reps / smaller batches (CI smoke)")
     ap.add_argument("--no-interpret", action="store_true",
-                    help="run the compiled Pallas kernel (real TPU only)")
+                    help="force the compiled Pallas kernel (real TPU only)")
+    ap.add_argument("--interpret", action="store_true",
+                    help="force interpreter mode (default: autodetect)")
     ap.add_argument("--sizes", type=int, nargs="+", default=None,
                     help="ring sizes to sweep (default: 1e3..1e6 full)")
     args = ap.parse_args()
-    run(full=not args.quick, out=args.out,
-        interpret=not args.no_interpret,
+    interpret = None
+    if args.no_interpret:
+        interpret = False
+    elif args.interpret:
+        interpret = True
+    run(full=not args.quick, out=args.out, interpret=interpret,
         sizes=tuple(args.sizes) if args.sizes else None)
 
 

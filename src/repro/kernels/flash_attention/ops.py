@@ -1,10 +1,16 @@
-"""Jit'd public wrapper for flash attention (Pallas on TPU, jnp oracle)."""
+"""Jit'd public wrapper for flash attention (Pallas on TPU, jnp oracle).
+
+``interpret=None`` (the default) autodetects the backend: the compiled
+Pallas kernel on TPU, interpreter mode everywhere else.
+"""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 
+from ..backend import resolve_interpret
 from .kernel import flash_attention_pallas
 from .ref import attention_ref
 
@@ -12,8 +18,8 @@ from .ref import attention_ref
 @partial(jax.jit, static_argnames=("causal", "use_pallas", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, use_pallas: bool = True,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: Optional[bool] = None) -> jax.Array:
     if use_pallas:
         return flash_attention_pallas(q, k, v, causal=causal,
-                                      interpret=interpret)
+                                      interpret=resolve_interpret(interpret))
     return attention_ref(q, k, v, causal=causal)

@@ -26,30 +26,48 @@ BQ = 1024          # queries per program (8 sublanes x 128 lanes)
 BT = 2048          # table entries per tile (8 KiB of uint32 in VMEM)
 
 
-def _ring_lookup_kernel(q_ref, t_ref, o_ref, *, n_total: int):
+def _tiles(kernel: str, bq, bt=None, **dims):
+    """Resolve (bq, bt) through the autotune cache when unset.
+
+    Explicit arguments always win; otherwise the persisted per-backend
+    winner (or the module defaults under interpret / cache miss).  Lazy
+    import keeps kernels importable without the autotune package."""
+    from ..autotune import tiles_for
+
+    t = tiles_for(kernel, **dims)
+    bq = int(bq) if bq else t["bq"]
+    if bt is None and "bt" not in t:
+        return bq
+    return bq, (int(bt) if bt else t["bt"])
+
+
+def _ring_lookup_kernel(q_ref, t_ref, o_ref, *, n_total: int, bt: int):
     ti = pl.program_id(1)
 
     @pl.when(ti == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    q = q_ref[...]                                  # (BQ,)
-    t = t_ref[...]                                  # (BT,)
+    q = q_ref[...]                                  # (bq,)
+    t = t_ref[...]                                  # (bt,)
     # mask table padding (last tile may exceed n_total)
-    base = ti * BT
-    valid = (base + jax.lax.iota(jnp.int32, BT)) < n_total
+    base = ti * bt
+    valid = (base + jax.lax.iota(jnp.int32, bt)) < n_total
     lt = (t[None, :] < q[:, None]) & valid[None, :]
     o_ref[...] += jnp.sum(lt.astype(jnp.int32), axis=1)
 
 
 def ring_lookup_pallas(keys: jax.Array, table: jax.Array, *,
-                       interpret: bool = True) -> jax.Array:
+                       interpret: bool = True,
+                       bq: int | None = None,
+                       bt: int | None = None) -> jax.Array:
     """keys: (Q,) uint32; table: (N,) sorted uint32 -> (Q,) int32."""
     q, n = keys.shape[0], table.shape[0]
     if n == 0:
         # mirror RingState.lookup's contract instead of surfacing the
         # mod-by-zero from the counts[:q] % n wraparound below
         raise LookupError("empty routing table")
+    BQ, BT = _tiles("ring_lookup", bq, bt, q=q, n=n)
     qp = (q + BQ - 1) // BQ * BQ
     np_ = (n + BT - 1) // BT * BT
     keys_p = jnp.pad(keys, (0, qp - q))
@@ -57,7 +75,7 @@ def ring_lookup_pallas(keys: jax.Array, table: jax.Array, *,
                       constant_values=jnp.array(0, table.dtype))
     grid = (qp // BQ, np_ // BT)
     counts = pl.pallas_call(
-        functools.partial(_ring_lookup_kernel, n_total=n),
+        functools.partial(_ring_lookup_kernel, n_total=n, bt=BT),
         grid=grid,
         in_specs=[
             pl.BlockSpec((BQ,), lambda qi, ti: (qi,)),
@@ -70,7 +88,8 @@ def ring_lookup_pallas(keys: jax.Array, table: jax.Array, *,
     return (counts[:q] % n).astype(jnp.int32)
 
 
-def _ring_lookup64_kernel(n_ref, qhi_ref, qlo_ref, thi_ref, tlo_ref, o_ref):
+def _ring_lookup64_kernel(n_ref, qhi_ref, qlo_ref, thi_ref, tlo_ref, o_ref,
+                          *, bt: int):
     """Two-word (hi, lo) lexicographic compare-and-count.
 
     Full 64-bit ring IDs are carried as a uint32 (hi, lo) word pair
@@ -89,12 +108,12 @@ def _ring_lookup64_kernel(n_ref, qhi_ref, qlo_ref, thi_ref, tlo_ref, o_ref):
         o_ref[...] = jnp.zeros_like(o_ref)
 
     n_total = n_ref[0]
-    qhi = qhi_ref[...]                              # (BQ,)
+    qhi = qhi_ref[...]                              # (bq,)
     qlo = qlo_ref[...]
-    thi = thi_ref[...]                              # (BT,)
+    thi = thi_ref[...]                              # (bt,)
     tlo = tlo_ref[...]
-    base = ti * BT
-    valid = (base + jax.lax.iota(jnp.int32, BT)) < n_total
+    base = ti * bt
+    valid = (base + jax.lax.iota(jnp.int32, bt)) < n_total
     lt = (thi[None, :] < qhi[:, None]) | (
         (thi[None, :] == qhi[:, None]) & (tlo[None, :] < qlo[:, None]))
     lt = lt & valid[None, :]
@@ -104,7 +123,9 @@ def _ring_lookup64_kernel(n_ref, qhi_ref, qlo_ref, thi_ref, tlo_ref, o_ref):
 def ring_lookup64_pallas(keys_hi: jax.Array, keys_lo: jax.Array,
                          table_hi: jax.Array, table_lo: jax.Array,
                          n: jax.Array, *,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool = True,
+                         bq: int | None = None,
+                         bt: int | None = None) -> jax.Array:
     """64-bit batched successor lookup over a hi/lo split table.
 
     keys_hi/keys_lo: (Q,) uint32 word pairs of the query IDs;
@@ -114,6 +135,7 @@ def ring_lookup64_pallas(keys_hi: jax.Array, keys_lo: jax.Array,
     Returns (Q,) int32 successor *indices* into the live table.
     """
     q, cap = keys_hi.shape[0], table_hi.shape[0]
+    BQ, BT = _tiles("ring_lookup", bq, bt, q=q, n=cap)
     qp = (q + BQ - 1) // BQ * BQ
     capp = (cap + BT - 1) // BT * BT
     keys_hi = jnp.pad(keys_hi, (0, qp - q))
@@ -122,7 +144,7 @@ def ring_lookup64_pallas(keys_hi: jax.Array, keys_lo: jax.Array,
     table_lo = jnp.pad(table_lo, (0, capp - cap))
     grid = (qp // BQ, capp // BT)
     counts = pl.pallas_call(
-        _ring_lookup64_kernel,
+        functools.partial(_ring_lookup64_kernel, bt=BT),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1,), lambda qi, ti: (0,)),
@@ -195,7 +217,8 @@ def _ring_lookup_bucketed_kernel(qhi_ref, qlo_ref, bhi_ref, blo_ref,
 def ring_lookup_bucketed_pallas(keys_hi: jax.Array, keys_lo: jax.Array,
                                 bkt_hi: jax.Array, bkt_lo: jax.Array,
                                 occ: jax.Array, *,
-                                interpret: bool = True):
+                                interpret: bool = True,
+                                bq: int | None = None):
     """Bucketized 64-bit successor lookup: O(BW) work per key.
 
     keys_hi/keys_lo: (Q,) uint32 query word pairs; bkt_hi/bkt_lo:
@@ -211,6 +234,9 @@ def ring_lookup_bucketed_pallas(keys_hi: jax.Array, keys_lo: jax.Array,
     r = nb.bit_length() - 1
     if nb != 1 << r:
         raise ValueError(f"bucket count {nb} is not a power of two")
+    # BW is a data-layout constant shared with RingState._BUCKET_ROW, not
+    # a tunable — only the query block size goes through the autotuner.
+    BQ = _tiles("ring_lookup_bucketed", bq, q=q, b=nb)
     qp = (q + BQ - 1) // BQ * BQ
     keys_hi = jnp.pad(keys_hi, (0, qp - q))
     keys_lo = jnp.pad(keys_lo, (0, qp - q))

@@ -45,11 +45,16 @@ def _ssm_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, h0_ref,
 
 def ssm_scan_pallas(x: jax.Array, dt: jax.Array, B: jax.Array, C: jax.Array,
                     A: jax.Array, D: jax.Array, h0: jax.Array, *,
-                    interpret: bool = True):
+                    interpret: bool = True, bd: int | None = None):
     """x,dt: (Bb,L,Din); B,C: (Bb,L,N); A: (Din,N); D: (Din,);
     h0: (Bb,Din,N) -> (y (Bb,L,Din), h_last (Bb,Din,N) f32)."""
     bb, l, din = x.shape
     n = A.shape[1]
+    if bd is None:
+        from ..autotune import tiles_for
+
+        bd = tiles_for("ssm_scan", din=din)["bd"]
+    BD = int(bd) if din % int(bd) == 0 else globals()["BD"]
     assert din % BD == 0, "pad d_inner to a BD multiple"
     grid = (bb, din // BD)
     y, h_last = pl.pallas_call(

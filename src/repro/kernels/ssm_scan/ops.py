@@ -1,20 +1,27 @@
-"""Jit'd public wrapper for the selective scan."""
+"""Jit'd public wrapper for the selective scan.
+
+``interpret=None`` (the default) autodetects the backend: the compiled
+Pallas kernel on TPU, interpreter mode everywhere else.
+"""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..backend import resolve_interpret
 from .kernel import ssm_scan_pallas
 from .ref import ssm_scan_ref
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def ssm_scan(x, dt, B, C, A, D, h0=None, *, use_pallas: bool = True,
-             interpret: bool = True):
+             interpret: Optional[bool] = None):
     if h0 is None:
         h0 = jnp.zeros((x.shape[0], x.shape[2], A.shape[1]), jnp.float32)
     if use_pallas:
-        return ssm_scan_pallas(x, dt, B, C, A, D, h0, interpret=interpret)
+        return ssm_scan_pallas(x, dt, B, C, A, D, h0,
+                               interpret=resolve_interpret(interpret))
     return ssm_scan_ref(x, dt, B, C, A, D, h0)

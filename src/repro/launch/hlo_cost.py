@@ -369,3 +369,19 @@ def analyze(hlo_text: str) -> Dict[str, object]:
         "collective_bytes_by_op": dict(c.coll),
         "collective_bytes": sum(c.coll.values()),
     }
+
+
+def fn_cost(fn, *args, static_argnames=None, **kwargs) -> Dict[str, object]:
+    """Compile ``fn(*args, **kwargs)`` on the current backend and run the
+    loop-aware analyzer over its optimized HLO.  The structural twin of a
+    measured benchmark row: bytes/FLOPs of the program the device will
+    actually execute (fusion boundaries included), so rooflines can put
+    an arithmetic-intensity estimate NEXT TO the measured throughput."""
+    import jax
+
+    jitted = jax.jit(fn, static_argnames=static_argnames)
+    compiled = jitted.lower(*args, **kwargs).compile()
+    out = analyze(compiled.as_text())
+    out["arithmetic_intensity"] = \
+        out["matmul_flops"] / max(float(out["hbm_bytes"]), 1.0)
+    return out

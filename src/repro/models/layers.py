@@ -245,7 +245,8 @@ def attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
               cache_index: Optional[jax.Array] = None,
               use_rope: bool = True,
               impl: str = "full",
-              decode_kernel: Optional[bool] = None
+              decode_kernel: Optional[bool] = None,
+              chunk: bool = False
               ) -> Tuple[jax.Array, Optional[Tuple]]:
     """GQA attention. Returns (out, new_cache).
 
@@ -253,6 +254,12 @@ def attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
     row writes at the same position) or a (B,) array of per-slot cache
     positions (continuous-batching decode: each slot advances at its own
     length; requires s == 1).
+
+    ``chunk`` marks a *continuation* prefill segment (chunked prefill,
+    scalar ``cache_index`` > 0 allowed): the fresh queries must attend
+    over the WHOLE cache — earlier chunks included — under the absolute
+    causal mask ``pos_k <= pos_q``, not just the fresh segment.  The
+    plain s > 1 path is only correct at offset 0.
     """
     b, s, d = x.shape
     h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -286,6 +293,21 @@ def attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
         if s == 1:
             out = decode_attention(q, k_cache, v_cache, length=lengths,
                                    use_kernel=decode_kernel)
+        elif chunk:
+            # continuation chunk: attend over the full cache (earlier
+            # chunks live below ``idx``) with the absolute causal mask.
+            # Garbage rows at positions >= idx + s are masked out.
+            kc = _repeat_kv(k_cache, h // hkv)
+            vc = _repeat_kv(v_cache, h // hkv)
+            sc = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
+                            preferred_element_type=jnp.float32)
+            sc = sc * (1.0 / math.sqrt(hd))
+            q_pos = idx + jnp.arange(s)
+            k_pos = jnp.arange(kc.shape[1])
+            sc = jnp.where((k_pos[None, :] <= q_pos[:, None])[None, None],
+                           sc, -1e30)
+            p = jax.nn.softmax(sc, axis=-1).astype(vc.dtype)
+            out = jnp.einsum("bhqk,bkhd->bqhd", p, vc).astype(q.dtype)
         else:
             # prefill: attend over the fresh segment with flash (the cache
             # is being filled from scratch) — never materialize S x S

@@ -90,6 +90,26 @@ class Model:
         (transformer families; SSM/hybrid/enc-dec decode in lockstep)."""
         return _module(self.cfg) is transformer
 
+    @property
+    def supports_chunked_prefill(self) -> bool:
+        """True when ``prefill_chunk`` can continue a prefill mid-cache
+        (standard-attention transformers; MLA's absorbed cache and the
+        SSM/enc-dec families have no chunk continuation path)."""
+        return _module(self.cfg) is transformer and not self.cfg.mla_kv_lora
+
+    def prefill_chunk(self, params: Params, tokens: jax.Array, cache,
+                      index) -> Tuple[jax.Array, Any]:
+        """One fixed-shape prefill segment starting at scalar cache
+        position ``index``.  Queries attend over the whole cache (earlier
+        chunks included) under the absolute causal mask; returns
+        ALL-position logits (B, S, V) so the caller can pick the true
+        last prompt column when the final segment is right-padded.
+        Because every call shares the segment shape, a whole admit
+        retraces nothing after the first chunk ever processed."""
+        return transformer.forward_with_cache(
+            params, tokens, cache, self.cfg, index, impl=self.attn_impl,
+            decode_kernel=self.decode_use_kernel, chunk=True)
+
     def decode_step(self, params: Params, cache, tokens: jax.Array,
                     index) -> Tuple[jax.Array, Any]:
         """One token per sequence.  ``index`` is the current cache length:

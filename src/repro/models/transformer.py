@@ -85,7 +85,8 @@ def _layer_body(cfg: ModelConfig, lp: Params, x: jax.Array, *,
                 positions: jax.Array, impl: str,
                 cache: Optional[Tuple] = None,
                 cache_index=None,
-                decode_kernel: Optional[bool] = None
+                decode_kernel: Optional[bool] = None,
+                chunk: bool = False
                 ) -> Tuple[jax.Array, Optional[Tuple]]:
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
     if cfg.mla_kv_lora:
@@ -96,7 +97,7 @@ def _layer_body(cfg: ModelConfig, lp: Params, x: jax.Array, *,
         a, new_cache = L.attention(lp["attn"], h, cfg, positions=positions,
                                    causal=True, cache=cache,
                                    cache_index=cache_index, impl=impl,
-                                   decode_kernel=decode_kernel)
+                                   decode_kernel=decode_kernel, chunk=chunk)
     x = x + a
     h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
     if cfg.moe_experts:
@@ -198,13 +199,20 @@ def forward_with_cache(params: Params, tokens: jax.Array, cache: Dict,
                        cfg: ModelConfig, cache_index, *,
                        impl: str = "full",
                        decode_kernel: Optional[bool] = None,
-                       image_embeds: Optional[jax.Array] = None
+                       image_embeds: Optional[jax.Array] = None,
+                       chunk: bool = False
                        ) -> Tuple[jax.Array, Dict]:
     """Prefill (S>1) or decode (S==1): returns (last-position logits, cache).
 
     ``cache_index`` may be a scalar (prefill / lockstep decode) or a (B,)
     array of per-slot cache positions (continuous-batching decode: every
     row writes and attends at its own length).
+
+    ``chunk=True`` marks a fixed-shape *continuation* prefill segment
+    (scalar ``cache_index``, possibly > 0): attention spans the whole
+    cache under the absolute causal mask, and ALL-position logits
+    (B, S, V) are returned so the caller can select the true last prompt
+    position when the segment carries right-padding.
     """
     x = L.embed(params["embed"], tokens, cfg)
     if image_embeds is not None:
@@ -219,10 +227,14 @@ def forward_with_cache(params: Params, tokens: jax.Array, cache: Dict,
         out, new_cache = _layer_body(cfg, lp, carry, positions=positions,
                                      impl=impl, cache=_cache_tuple(cfg, cl),
                                      cache_index=idx,
-                                     decode_kernel=decode_kernel)
+                                     decode_kernel=decode_kernel,
+                                     chunk=chunk)
         return out, _cache_dict(cfg, new_cache)
 
     x, new_caches = jax.lax.scan(body, x, (params["layers"], cache))
+    if chunk:
+        h = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return L.logits_fn(params["embed"], h, cfg), new_caches
     h = L.rms_norm(x[:, -1:], params["ln_f"], cfg.norm_eps)
     logits = L.logits_fn(params["embed"], h, cfg)[:, 0]
     return logits, new_caches

@@ -30,10 +30,11 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 import numpy as np
 
+from repro.core.ringstate import _BUCKET_MIN_N
 from repro.models import Model
 from repro.runtime import Membership, ReplicaSupervisor
 
@@ -106,7 +107,10 @@ class ServeCluster:
 
     def __init__(self, membership: Membership, model: Model, params, *,
                  slots: int = 8, max_len: int = 64, replication: int = 2,
-                 decode_kernel: Optional[bool] = None):
+                 decode_kernel: Optional[bool] = None,
+                 prefill_chunk: Optional[int] = 16,
+                 prefill_duty: int = 6,
+                 fused: Optional[bool] = None):
         self.membership = membership
         self.state = membership.ring_state
         self.model = model if decode_kernel is None else \
@@ -115,6 +119,20 @@ class ServeCluster:
         self.slots = slots
         self.max_len = max_len
         self.replication = replication
+        # chunked prefill segment length (None/0 = whole-prompt prefill);
+        # migration re-prefills additionally OVERLAP decode rounds
+        self.prefill_chunk = prefill_chunk
+        # stall-free scheduling: advance in-flight prefill chunks only
+        # every Nth decode round, bounding the sustained decode-
+        # throughput hit to ~chunk_cost/(N*round_cost) while the drain
+        # stays far below a synchronous whole-prompt re-prefill
+        self.prefill_duty = max(int(prefill_duty), 1)
+        self._step_seq = 0
+        # fused route→gather→decode rounds: None = auto (engage once the
+        # ring is big enough for the bucket directory to pay for itself —
+        # the same _BUCKET_MIN_N threshold the lookup dispatch uses),
+        # True = force (tests / small rings), False = never
+        self.fused = fused
         self.router = SessionRouter(membership)
         self.supervisor = ReplicaSupervisor(membership)
         self.replicas: Dict[int, Replica] = {}
@@ -123,6 +141,15 @@ class ServeCluster:
         self.proxied: Dict[int, int] = {}      # gateway node -> proxy count
         self.migrated_sessions = 0
         self.stranded = 0                  # handoff attempts deferred on
+        # overlapped migration re-prefills in flight: sid -> target node
+        self._pending_homes: Dict[str, Dict] = {}
+        self._retry: Set[str] = set()      # sids needing an off-event re-home
+        self.fused_rounds = 0
+        self.fused_routed_keys = 0
+        # fused-route owners that differ from the control plane's record:
+        # sessions living on a replica_set spill member or mid-migration
+        self.route_divergence = 0
+        self._route_cal_us_per_key: Optional[float] = None
         self.state.track_owner_diffs()     # arm arc logging before events
         self._seen_version = self.state.active_version
         membership.subscribe(self._on_event)
@@ -145,7 +172,8 @@ class ServeCluster:
         rep = self._live_replica(node)
         if rep is None:
             rep = Replica(self.model, slots=self.slots, max_len=self.max_len,
-                          generation=self.supervisor.stamp())
+                          generation=self.supervisor.stamp(),
+                          prefill_chunk=self.prefill_chunk)
             rep.attach_params(self.params)
             self.replicas[node] = rep
         return rep
@@ -216,23 +244,137 @@ class ServeCluster:
                 rep.evict(rec.session_id)
 
     # -- decode loop -----------------------------------------------------------
+    def _route_table(self):
+        """Device bucket directory for fused rounds, or None to run the
+        classic (unfused) rounds.  Auto mode engages fusion at the same
+        ring size the lookup dispatch switches to the bucket index, so
+        small test clusters keep their exact legacy upload accounting."""
+        if self.fused is False:
+            return None
+        if self.fused is None and len(self.state) < _BUCKET_MIN_N:
+            return None
+        return self.state.device_bucket_table()
+
+    def _calibrate_route(self, rep: Replica, route) -> None:
+        """One-time per-key cost of the on-device route, measured by
+        timing the bucketized lookup standalone on this replica's key
+        slab (warm trace, second call timed).  The fused round is ONE
+        dispatch, so this is how the queue/route/decode trace splits
+        survive fusion: the round's wall time is split into a route
+        share (this calibration x keys) and a decode share."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels.ring_lookup.ops import ring_lookup_bucketed
+        khi = jnp.asarray(rep.key_hi)
+        klo = jnp.asarray(rep.key_lo)
+        jax.block_until_ready(ring_lookup_bucketed(khi, klo, *route))
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(ring_lookup_bucketed(khi, klo, *route))
+        self._route_cal_us_per_key = \
+            (time.perf_counter_ns() - t0) / 1e3 / max(rep.key_hi.size, 1)
+
     def step(self) -> Dict[str, int]:
-        """One continuous-batching decode round across every replica."""
+        """One continuous-batching round across every replica: advance
+        in-flight overlapped prefills by one chunk, then run one decode
+        round (fused with the on-device route when enabled)."""
         if self._seen_version != self.state.active_version:
             self._migrate_affected()       # retry deferred re-homes
+        self._service_pending()
+        route = self._route_table()
+        self._step_seq += 1
+        duty_turn = self._step_seq % self.prefill_duty == 0
         out: Dict[str, int] = {}
         for node in list(self.replicas):
             rep = self.replicas[node]
+            # advance chunks on the duty-cycle beat — or every round
+            # when the replica has no decode traffic to protect
+            if rep.num_pending and (duty_turn or not rep.sessions):
+                t0 = time.perf_counter_ns()
+                completions = rep.advance_prefills()
+                adv_us = (time.perf_counter_ns() - t0) / 1e3
+                self._finish_pending(node, rep, completions, adv_us)
+            if route is not None and self._route_cal_us_per_key is None \
+                    and rep.sessions:
+                self._calibrate_route(rep, route)
             t0 = time.perf_counter_ns()
-            toks = rep.decode_round()
-            share_us = (time.perf_counter_ns() - t0) / 1e3 / max(len(toks), 1)
+            toks = rep.decode_round(route=route)
+            round_us = (time.perf_counter_ns() - t0) / 1e3
+            route_us = 0.0
+            if route is not None and toks:
+                self.fused_rounds += 1
+                self.fused_routed_keys += len(rep.routed_owners)
+                self._note_owner_divergence(rep)
+                route_us = min((self._route_cal_us_per_key or 0.0)
+                               * len(toks), round_us)
+            share_route = route_us / max(len(toks), 1)
+            share_decode = (round_us - route_us) / max(len(toks), 1)
             for sid, tok in toks.items():
                 trace = self.traces.get(sid)
                 if trace is not None:
-                    trace.decode_us += share_us
+                    trace.decode_us += share_decode
+                    trace.route_us += share_route
                 self._push_token(self.sessions[sid], tok)
                 out[sid] = tok
         return out
+
+    def _note_owner_divergence(self, rep: Replica) -> None:
+        for sid, owner in rep.routed_owners.items():
+            rec = self.sessions.get(sid)
+            if rec is not None and owner != rec.owner:
+                self.route_divergence += 1
+
+    def _finish_pending(self, node: int, rep: Replica,
+                        completions: Dict[str, int], adv_us: float) -> None:
+        """Commit overlapped re-prefills that just completed (the admit
+        token is the session's next token) and re-strand any that
+        failed mid-chunk (their slot is already released)."""
+        share_us = adv_us / max(len(completions), 1)
+        for sid, tok in completions.items():
+            self._pending_homes.pop(sid, None)
+            rec = self.sessions.get(sid)
+            if rec is None:
+                rep.evict(sid)
+                continue
+            trace = self.traces.get(sid)
+            if trace is not None:
+                trace.decode_us += share_us
+            self._push_token(rec, tok)
+        for sid in rep.failed_prefills:
+            self._pending_homes.pop(sid, None)
+            self._retry.add(sid)
+        rep.failed_prefills.clear()
+
+    def _service_pending(self) -> None:
+        """Re-home sessions whose overlapped-prefill target died with the
+        chunks in flight, plus strands with no membership event left to
+        piggyback a retry on."""
+        for sid in list(self._pending_homes):
+            node = self._pending_homes[sid]["node"]
+            rep = self._live_replica(node)
+            if rep is None or (sid not in rep._pending
+                               and sid not in rep.sessions):
+                del self._pending_homes[sid]
+                self._retry.add(sid)
+        for sid in list(self._retry):
+            self._retry.discard(sid)
+            rec = self.sessions.get(sid)
+            if rec is None or rec.done or self._session_resident(rec) \
+                    or sid in self._pending_homes:
+                continue
+            self._rehome(rec)
+
+    def _rehome(self, rec: SessionRecord) -> None:
+        group = [int(p) for p in self.state.replica_set(rec.key,
+                                                        self.replication)]
+        try:
+            self._handoff(rec, group)
+        except RuntimeError:               # replica_set full right now
+            self.stranded += 1
+            self._retry.add(rec.session_id)
+            trace = self.traces.get(rec.session_id)
+            if trace is not None and not trace._stranded_ns:
+                trace._stranded_ns = time.perf_counter_ns()
 
     def run(self, max_rounds: int = 1024) -> int:
         """Decode until every live session completes; returns rounds."""
@@ -247,6 +389,11 @@ class ServeCluster:
     @property
     def live_sessions(self) -> List[SessionRecord]:
         return [r for r in self.sessions.values() if not r.done]
+
+    @property
+    def pending_migrations(self) -> int:
+        """Overlapped re-prefills still in flight (chunks not yet done)."""
+        return len(self._pending_homes)
 
     # -- churn handling --------------------------------------------------------
     def _on_event(self, ev) -> None:
@@ -276,6 +423,9 @@ class ServeCluster:
         moved = 0
         complete = True
         for rec in (r for r, h in zip(live, hit) if h):
+            if rec.session_id in self._pending_homes:
+                continue    # an overlapped re-home is already in flight;
+                # _service_pending re-strands it if that target dies
             t0 = time.perf_counter_ns()
             group = [int(p) for p in self.state.replica_set(
                 rec.key, self.replication)]
@@ -319,14 +469,30 @@ class ServeCluster:
                 f"no capacity in the {len(group)}-way replica set for "
                 f"session {rec.session_id}")
         t0 = time.perf_counter_ns()
-        tok = self._replica_for(new_owner).admit(
-            Request(rec.session_id, rec.transcript, rec.max_new_tokens))
         trace = self.traces.get(rec.session_id)
+        if trace is not None and trace._stranded_ns:
+            trace.queue_us += (t0 - trace._stranded_ns) / 1e3
+            trace._stranded_ns = 0
+        rep = self._replica_for(new_owner)
+        req = Request(rec.session_id, rec.transcript, rec.max_new_tokens)
+        if not resident and rep._chunkable(len(req.prompt)):
+            # the old slab is gone, so nobody is decoding this session:
+            # re-prefill it one fixed-shape chunk per round, OVERLAPPED
+            # with the replicas' decode rounds instead of stalling them
+            if rep.begin_admit(req) is None:
+                self._pending_homes[rec.session_id] = {"node": new_owner,
+                                                       "t0": t0}
+                # ownership transfers NOW (the old owner is gone and the
+                # route must point at the re-prefill target); the next
+                # token arrives when the pending completes
+                rec.owner = new_owner
+                rec.migrations += 1
+                self.migrated_sessions += 1
+                return
+            raise AssertionError("chunkable begin_admit returned a token")
+        tok = rep.admit(req)
         if trace is not None:
             trace.decode_us += (time.perf_counter_ns() - t0) / 1e3
-            if trace._stranded_ns:          # waited for capacity to free
-                trace.queue_us += (t0 - trace._stranded_ns) / 1e3
-                trace._stranded_ns = 0
         if resident:                        # clean handoff: free the slot
             self.replicas[rec.owner].evict(rec.session_id)
         rec.owner = new_owner

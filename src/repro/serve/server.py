@@ -19,7 +19,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -111,7 +111,16 @@ def _jitted(model: Model) -> Tuple:
     out-of-range padding index is dropped on the way back (padded rows
     never corrupt the slab).  ``decode_full`` is the full-house variant
     (bucket == slab width): the gather would be the identity, so it
-    steps the slab in place and skips the scatter copy."""
+    steps the slab in place and skips the scatter copy.
+
+    The ``*_fused`` variants additionally run the device-resident
+    bucketized ring lookup on the batch's session keys INSIDE the same
+    program (the inner jitted wrapper inlines): one decode round =
+    route + gather + decode in a single dispatch, returning the
+    (hi, lo) owner words next to the logits.  ``prefill_chunk`` is the
+    fixed-shape continuation prefill segment (chunked prefill — every
+    chunk of every admit shares one trace), or None for families
+    without a chunk path."""
     prefill = jax.jit(model.prefill)
 
     def _index(lengths):
@@ -137,7 +146,37 @@ def _jitted(model: Model) -> Tuple:
             lambda c, s: c.at[:, idx].set(s, mode="drop"), cache, new_sub)
         return logits, out_cache
 
-    return prefill, decode_full, decode_slots
+    from repro.kernels.ring_lookup.ops import ring_lookup_bucketed
+
+    @jax.jit
+    def decode_full_fused(params, cache, tokens, lengths,
+                          khi, klo, bhi, blo, occ):
+        ohi, olo = ring_lookup_bucketed(khi, klo, bhi, blo, occ)
+        logits, new_cache = model.decode_step(params, cache, tokens,
+                                              _index(lengths))
+        return logits, new_cache, ohi, olo
+
+    @jax.jit
+    def decode_slots_fused(params, cache, tokens, lengths, idx,
+                           khi, klo, bhi, blo, occ):
+        qhi = jnp.take(khi, idx, axis=0, mode="fill", fill_value=0)
+        qlo = jnp.take(klo, idx, axis=0, mode="fill", fill_value=0)
+        ohi, olo = ring_lookup_bucketed(qhi, qlo, bhi, blo, occ)
+        sub = jax.tree.map(
+            lambda c: jnp.take(c, idx, axis=1, mode="fill", fill_value=0),
+            cache)
+        tok = jnp.take(tokens, idx, axis=0, mode="fill", fill_value=0)
+        ln = jnp.take(lengths, idx, axis=0, mode="fill", fill_value=0)
+        logits, new_sub = model.decode_step(params, sub, tok, _index(ln))
+        out_cache = jax.tree.map(
+            lambda c, s: c.at[:, idx].set(s, mode="drop"), cache, new_sub)
+        return logits, out_cache, ohi, olo
+
+    prefill_chunk = jax.jit(model.prefill_chunk) \
+        if model.supports_chunked_prefill else None
+
+    return (prefill, decode_full, decode_slots,
+            decode_full_fused, decode_slots_fused, prefill_chunk)
 
 
 class Replica:
@@ -157,7 +196,7 @@ class Replica:
     """
 
     def __init__(self, model: Model, *, slots: int, max_len: int,
-                 generation: int = 0):
+                 generation: int = 0, prefill_chunk: Optional[int] = None):
         self.model = model
         self.slots = slots
         self.max_len = max_len
@@ -166,9 +205,26 @@ class Replica:
         self.lengths = np.zeros((slots,), np.int32)
         self.tokens = np.zeros((slots, 1), np.int32)
         self.active = np.zeros((slots,), bool)
+        # per-slot session ring-key words for the fused route→decode round
+        self.key_hi = np.zeros((slots,), np.uint32)
+        self.key_lo = np.zeros((slots,), np.uint32)
         self.sessions: Dict[str, int] = {}
         self._free = list(range(slots - 1, -1, -1))   # pop() -> slot 0 first
-        self._prefill, self._decode_full, self._decode_slots = _jitted(model)
+        # chunked prefill: fixed segment length (None = whole-prompt
+        # prefill; ignored for families without a chunk path)
+        self.prefill_chunk = prefill_chunk \
+            if model.supports_chunked_prefill else None
+        # in-flight overlapped prefills: sid -> progress state (slot is
+        # reserved but the session is NOT in ``sessions`` until complete,
+        # so decode_round never sees a half-filled slot)
+        self._pending: Dict[str, dict] = {}
+        # owners resolved by the last *fused* decode round: sid -> uint64
+        self.routed_owners: Dict[str, int] = {}
+        # sids whose overlapped prefill failed (slot already released)
+        self.failed_prefills: List[str] = []
+        (self._prefill, self._decode_full, self._decode_slots,
+         self._decode_full_fused, self._decode_slots_fused,
+         self._prefill_chunk) = _jitted(model)
 
     @property
     def num_active(self) -> int:
@@ -205,17 +261,22 @@ class Replica:
         else:
             raise RuntimeError("replica full")
         try:
-            batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
             one = self.model.init_cache(1, self.max_len)
-            logits, one = self._prefill(self.params, batch, one)
+            if self._chunkable(s):
+                # fixed-shape chunk loop: every admit of every length
+                # reuses ONE compiled segment program (whole-prompt
+                # prefill retraces per distinct prompt length — the bulk
+                # of the measured per-session migration cost)
+                tok, one = self._run_chunks(req.prompt, one)
+            else:
+                batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+                logits, one = self._prefill(self.params, batch, one)
+                tok = int(jnp.argmax(logits[0]))
             # the commit stays inside the try: with async dispatch a
             # device-side prefill failure (OOM, kernel error) surfaces
             # only HERE, when the result is first materialized
             self._write_slot(one, slot)
-            self.lengths[slot] = s
-            tok = int(jnp.argmax(logits[0]))
-            self.tokens[slot, 0] = tok
-            self.active[slot] = True
+            self._commit_slot(req.session_id, slot, s, tok)
         except BaseException:
             if fresh:
                 del self.sessions[req.session_id]
@@ -226,12 +287,124 @@ class Replica:
             raise
         return tok
 
+    # -- chunked / overlapped prefill ---------------------------------------
+    def _chunkable(self, s: int) -> bool:
+        """Chunk the prefill iff a chunk size is configured, the model
+        has a continuation path, and the padded prompt fits the cache."""
+        c = self.prefill_chunk
+        return bool(c) and self._prefill_chunk is not None \
+            and (s + c - 1) // c * c <= self.max_len
+
+    def _run_chunks(self, prompt: np.ndarray, one) -> Tuple[int, object]:
+        """Drive the fixed-shape segment program over a whole prompt
+        (synchronous variant of the overlapped path); returns (first
+        generated token, filled 1-row cache)."""
+        c = self.prefill_chunk
+        s = len(prompt)
+        padded = (s + c - 1) // c * c
+        buf = np.zeros(padded, np.int32)
+        buf[:s] = prompt
+        logits = None
+        for off in range(0, padded, c):
+            seg = jnp.asarray(buf[off:off + c], jnp.int32)[None, :]
+            logits, one = self._prefill_chunk(self.params, seg, one, off)
+        # the prompt's last real token sits at column (s-1) - (padded-c)
+        # of the final (right-padded) segment's all-position logits
+        tok = int(jnp.argmax(logits[0, (s - 1) - (padded - c)]))
+        return tok, one
+
+    def _commit_slot(self, session_id: str, slot: int, s: int,
+                     tok: int) -> None:
+        key = np.uint64(session_key(session_id))
+        self.key_hi[slot] = np.uint32(key >> np.uint64(32))
+        self.key_lo[slot] = np.uint32(key & np.uint64(0xFFFFFFFF))
+        self.lengths[slot] = s
+        self.tokens[slot, 0] = tok
+        self.active[slot] = True
+
+    def begin_admit(self, req: Request) -> Optional[int]:
+        """Start an admit that overlaps with decode rounds.
+
+        When the prompt is chunkable the slot is reserved, the prefill
+        state parked in ``_pending``, and None is returned — subsequent
+        ``decode_round`` calls advance it one fixed-shape chunk at a
+        time (``advance_prefills``) until the first token materializes.
+        Otherwise this degrades to the synchronous ``admit`` and returns
+        its first token directly.  The session enters ``sessions`` only
+        on completion, so a half-filled slot is never decoded and a
+        chunk failure cannot leave a phantom session."""
+        s = len(req.prompt)
+        if not self._chunkable(s):
+            return self.admit(req)
+        if req.session_id in self.sessions or req.session_id in self._pending:
+            raise RuntimeError(f"session {req.session_id} already resident")
+        if s >= self.max_len:
+            raise ValueError(f"prompt of {s} tokens >= max_len {self.max_len}")
+        if not self._free:
+            raise RuntimeError("replica full")
+        slot = self._free.pop()
+        c = self.prefill_chunk
+        padded = (s + c - 1) // c * c
+        buf = np.zeros(padded, np.int32)
+        buf[:s] = np.asarray(req.prompt, np.int32)
+        self._pending[req.session_id] = {
+            "slot": slot, "cache": self.model.init_cache(1, self.max_len),
+            "prompt": buf, "s": s, "off": 0, "logits": None,
+        }
+        return None
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._pending)
+
+    def advance_prefills(self, chunks: int = 1) -> Dict[str, int]:
+        """Advance every in-flight overlapped prefill by up to ``chunks``
+        fixed-shape segments; returns {sid: first token} for the ones
+        that completed.  A failed chunk releases the reserved slot,
+        drops the pending state, and records the sid in
+        ``failed_prefills`` (instead of raising, so one bad session
+        can't discard siblings' completions mid-loop) — the cluster
+        re-strands failed sessions for a later re-home."""
+        done: Dict[str, int] = {}
+        for sid in list(self._pending):
+            st = self._pending[sid]
+            try:
+                c = self.prefill_chunk
+                for _ in range(chunks):
+                    off = st["off"]
+                    seg = jnp.asarray(st["prompt"][off:off + c],
+                                      jnp.int32)[None, :]
+                    st["logits"], st["cache"] = self._prefill_chunk(
+                        self.params, seg, st["cache"], off)
+                    st["off"] = off + c
+                    if st["off"] >= len(st["prompt"]):
+                        break
+                if st["off"] < len(st["prompt"]):
+                    continue
+                padded, s, slot = len(st["prompt"]), st["s"], st["slot"]
+                tok = int(jnp.argmax(
+                    st["logits"][0, (s - 1) - (padded - c)]))
+                self._write_slot(st["cache"], slot)
+                self.sessions[sid] = slot
+                self._commit_slot(sid, slot, s, tok)
+                del self._pending[sid]
+                done[sid] = tok
+            except Exception:
+                slot = st["slot"]
+                del self._pending[sid]
+                self._free.append(slot)
+                self.active[slot] = False
+                self.lengths[slot] = 0
+                self.tokens[slot, 0] = 0
+                self.failed_prefills.append(sid)
+        return done
+
     def _write_slot(self, one_cache, slot: int) -> None:
         def wr(dst, src):
             return dst.at[:, slot:slot + 1].set(src) if dst.ndim >= 2 else dst
         self.cache = jax.tree.map(wr, self.cache, one_cache)
 
-    def decode_round(self) -> Dict[str, int]:
+    def decode_round(self, route=None) -> Dict[str, int]:
         """One decode step for all active sessions — each at its own
         cache position.  The active slots are compacted into a batch
         padded to a power-of-two bucket (see ``_decode_bucket``): decode
@@ -239,31 +412,60 @@ class Replica:
         sees log2(slots)+1 batch shapes, so admitting or evicting a
         session never costs a recompile.  Padding rows carry an
         out-of-range index: gathers fill them with zeros and the KV
-        scatter drops them."""
+        scatter drops them.
+
+        ``route`` is the device bucket directory (bkt_hi, bkt_lo, occ)
+        from ``RingState.device_bucket_table``: when given, the round
+        runs the FUSED program — the bucketized owner lookup on the
+        batch's session keys rides inside the same dispatch as the
+        gather + decode, and the resolved owners land in
+        ``routed_owners`` (sid -> uint64 peer id) for the cluster's
+        ownership accounting.  One device program per round either way.
+        """
+        self.routed_owners = {}
         if not self.sessions:
             return {}
         act_idx = np.nonzero(self.active)[0].astype(np.int32)
         bucket = _decode_bucket(act_idx.size, self.slots)
+        ohi = olo = None
         if bucket == self.slots:
             # full house: the gather would be the identity permutation —
             # step the slab directly and skip the scatter-back copy
             # (inactive rows decode garbage at position 0, as the slab
             # engine always did; admit rewrites the whole slot anyway)
-            logits, self.cache = self._decode_full(
-                self.params, self.cache, jnp.asarray(self.tokens),
-                jnp.asarray(self.lengths))
+            if route is not None:
+                logits, self.cache, ohi, olo = self._decode_full_fused(
+                    self.params, self.cache, jnp.asarray(self.tokens),
+                    jnp.asarray(self.lengths), jnp.asarray(self.key_hi),
+                    jnp.asarray(self.key_lo), *route)
+            else:
+                logits, self.cache = self._decode_full(
+                    self.params, self.cache, jnp.asarray(self.tokens),
+                    jnp.asarray(self.lengths))
             rows = act_idx
         else:
             idx = np.full(bucket, self.slots, np.int32)  # slots = OOB pad
             idx[:act_idx.size] = act_idx
-            logits, self.cache = self._decode_slots(
-                self.params, self.cache, jnp.asarray(self.tokens),
-                jnp.asarray(self.lengths), jnp.asarray(idx))
+            if route is not None:
+                logits, self.cache, ohi, olo = self._decode_slots_fused(
+                    self.params, self.cache, jnp.asarray(self.tokens),
+                    jnp.asarray(self.lengths), jnp.asarray(idx),
+                    jnp.asarray(self.key_hi), jnp.asarray(self.key_lo),
+                    *route)
+            else:
+                logits, self.cache = self._decode_slots(
+                    self.params, self.cache, jnp.asarray(self.tokens),
+                    jnp.asarray(self.lengths), jnp.asarray(idx))
             rows = np.arange(act_idx.size)
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         row_of = {int(s): int(r) for s, r in zip(act_idx, rows)}
         self.tokens[act_idx, 0] = nxt[rows]
         self.lengths[act_idx] += 1
+        if ohi is not None:
+            owners = (np.asarray(ohi).astype(np.uint64) << np.uint64(32)) \
+                | np.asarray(olo).astype(np.uint64)
+            self.routed_owners = {sid: int(owners[row_of[slot]])
+                                  for sid, slot in self.sessions.items()}
         return {sid: int(nxt[row_of[slot]])
                 for sid, slot in self.sessions.items()}
 
@@ -273,8 +475,13 @@ class Replica:
         inflated every remaining session's decode position."""
         slot = self.sessions.pop(session_id, None)
         if slot is None:
+            pend = self._pending.pop(session_id, None)
+            if pend is not None:           # abandon an in-flight prefill
+                self._free.append(pend["slot"])
             return
         self.active[slot] = False
         self.lengths[slot] = 0
         self.tokens[slot, 0] = 0
+        self.key_hi[slot] = 0
+        self.key_lo[slot] = 0
         self._free.append(slot)

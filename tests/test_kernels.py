@@ -212,6 +212,104 @@ def test_ssm_scan_sweep(bb, l, din, n):
     assert float(jnp.max(jnp.abs(h1 - h2))) < 1e-4
 
 
+# ---------------------------------------------------------------------------
+# Compiled <-> interpret parity: on an accelerator, the Mosaic-compiled
+# kernel must agree with the interpreter that every oracle test above
+# runs against.  The whole class self-skips on CPU-only hosts, where
+# interpret IS the only execution path and parity is vacuous.
+# ---------------------------------------------------------------------------
+
+from repro.kernels.backend import default_interpret, mode_label  # noqa: E402
+
+compiled_only = pytest.mark.skipif(
+    default_interpret(),
+    reason=f"no compiled backend ({mode_label()}): interpret mode is the "
+           "only execution path here, so compiled parity cannot run")
+
+
+@compiled_only
+def test_parity_ring_lookup():
+    table = np.sort(RNG.choice(2**32 - 1, size=4096, replace=False)
+                    ).astype(np.uint32)
+    keys = jnp.asarray(RNG.integers(0, 2**32, size=1024, dtype=np.uint32))
+    tbl = jnp.asarray(table)
+    np.testing.assert_array_equal(
+        np.asarray(ring_lookup(keys, tbl, interpret=False)),
+        np.asarray(ring_lookup(keys, tbl, interpret=True)))
+
+
+@compiled_only
+def test_parity_ring_lookup_bucketed():
+    table = np.sort(np.unique(
+        RNG.integers(0, 2**64, size=2048, dtype=np.uint64)))
+    bhi, blo, occ = _bucket_arrays(table, 8)
+    khi, klo = _split64(RNG.integers(0, 2**64, size=1024, dtype=np.uint64))
+    args = tuple(jnp.asarray(a) for a in (khi, klo, bhi, blo, occ))
+    chi, clo = ring_lookup_bucketed(*args, interpret=False)
+    ihi, ilo = ring_lookup_bucketed(*args, interpret=True)
+    np.testing.assert_array_equal(np.asarray(chi), np.asarray(ihi))
+    np.testing.assert_array_equal(np.asarray(clo), np.asarray(ilo))
+
+
+@compiled_only
+def test_parity_edra_tree():
+    from repro.kernels.edra_tree.ops import edra_tree
+    p, n = 4096, 40_960
+    args = tuple(jnp.asarray(a) for a in (
+        np.sort(RNG.choice(n, size=p, replace=False)).astype(np.uint32),
+        np.full(p, n, np.uint32),
+        RNG.integers(0, n, p).astype(np.uint32),
+        RNG.uniform(0, 50, p).astype(np.float32),
+        RNG.integers(0, 2**32, p, dtype=np.uint64).astype(np.uint32)))
+    kw = dict(levels=8, theta=0.25, delta_avg=0.02)
+    comp = edra_tree(*args, interpret=False, **kw)
+    intp = edra_tree(*args, interpret=True, **kw)
+    for c, i in zip(jax.tree_util.tree_leaves(comp),
+                    jax.tree_util.tree_leaves(intp)):
+        np.testing.assert_allclose(np.asarray(c, np.float64),
+                                   np.asarray(i, np.float64), rtol=1e-5)
+
+
+@compiled_only
+def test_parity_decode_attention():
+    b, h, hkv, hd, s = 2, 8, 2, 128, 512
+    q = jnp.asarray(RNG.standard_normal((b, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, hkv, hd)), jnp.float32)
+    length = jnp.asarray(RNG.integers(1, s, size=(b,)), jnp.int32)
+    comp = decode_attention(q, k, v, length, interpret=False)
+    intp = decode_attention(q, k, v, length, interpret=True)
+    # both paths accumulate in f32; tolerance covers op-order drift only
+    assert float(jnp.max(jnp.abs(comp - intp))) < 1e-5
+
+
+@compiled_only
+def test_parity_flash_attention():
+    b, s, h, hkv, hd = 2, 256, 4, 2, 128
+    q = jnp.asarray(RNG.standard_normal((b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((b, s, hkv, hd)), jnp.float32)
+    comp = flash_attention(q, k, v, causal=True, interpret=False)
+    intp = flash_attention(q, k, v, causal=True, interpret=True)
+    assert float(jnp.max(jnp.abs(comp - intp))) < 1e-5
+
+
+@compiled_only
+def test_parity_ssm_scan():
+    bb, l, din, n = 2, 64, 256, 16
+    x = jnp.asarray(RNG.standard_normal((bb, l, din)) * 0.1, jnp.float32)
+    dt = jnp.asarray(np.abs(RNG.standard_normal((bb, l, din))) * 0.1,
+                     jnp.float32)
+    B = jnp.asarray(RNG.standard_normal((bb, l, n)) * 0.5, jnp.float32)
+    C = jnp.asarray(RNG.standard_normal((bb, l, n)) * 0.5, jnp.float32)
+    A = jnp.asarray(-np.abs(RNG.standard_normal((din, n))) - 0.1, jnp.float32)
+    D = jnp.ones((din,), jnp.float32)
+    yc, hc = ssm_scan(x, dt, B, C, A, D, interpret=False)
+    yi, hi = ssm_scan(x, dt, B, C, A, D, interpret=True)
+    assert float(jnp.max(jnp.abs(yc - yi))) < 1e-4
+    assert float(jnp.max(jnp.abs(hc - hi))) < 1e-4
+
+
 def test_ssm_scan_matches_model_layer():
     """Kernel result == the model's chunked associative-scan path."""
     from repro.models.ssm import _scan_chunks_m1
