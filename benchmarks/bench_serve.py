@@ -1,19 +1,28 @@
-"""Serve-plane benchmark: continuous-batching decode throughput and
-churn migration latency.
+"""Serve-plane benchmark: continuous-batching decode throughput, churn
+migration latency across three re-home strategies, and the
+cross-session prefix cache.
 
-Three measurements, emitted to BENCH_serve.json:
+Four measurements, emitted to BENCH_serve.json:
 
   * **decode scaling** — aggregate decode tokens/s as the number of
     active slots grows on one replica.  The vectorized slot engine steps
     every active slot per jitted round, so the round time is ~flat and
     throughput must scale with the active count (the acceptance check:
     NOT gated by the longest session).
-  * **migration latency** — wall time from the membership event to every
-    affected session being fully re-homed.  Re-prefills run as
-    fixed-shape CHUNKS overlapped with decode rounds (one jit trace for
-    all prompt lengths, instead of a per-length retrace stalling the
-    event handler), so the event handler itself returns in µs and the
-    per-session cost is the drain time.
+  * **migration variants** — wall time from the membership event to
+    every affected session being fully re-homed, side by side for the
+    three strategies the serve plane has grown: ``whole`` (synchronous
+    whole-transcript re-prefill, one retrace per distinct length),
+    ``chunked`` (fixed-shape chunk re-prefills overlapped with decode
+    rounds), and ``handoff`` (DESIGN.md §11: fetch the victim's KV
+    blocks from their replica sets, re-prefill only the final segment).
+    Each variant also reports the decode-round degradation measured
+    WHILE its migration drains — the handoff's claim is lower
+    per-session latency AND a quieter drain.
+  * **prefix cache** — admit latency for sessions sharing a system
+    prompt, cold (first session computes and publishes the shared
+    chunks) vs warm (later sessions import them), plus the hit rate and
+    the prefill FLOPs the hits skipped.
   * **concurrent prefill** — decode-round throughput while a chunked
     prefill advances in the background vs idle; the overlap is only a
     win if decode degradation stays small.
@@ -50,6 +59,15 @@ def _prompts(cfg, count, seed=0):
     # per length, not once per session
     rng = np.random.default_rng(seed)
     return [rng.integers(0, cfg.vocab, (4, 8, 12)[i % 3], dtype=np.int32)
+            for i in range(count)]
+
+
+def _long_prompts(cfg, count, seed=0):
+    # migration-variant prompts: long enough that every transcript
+    # crosses chunk boundaries, so the handoff variant has KV blocks to
+    # fetch (a 4-token prompt would make every fetch a trivial miss)
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, (20, 28, 36)[i % 3], dtype=np.int32)
             for i in range(count)]
 
 
@@ -137,18 +155,25 @@ def bench_concurrent_prefill(cfg, model, params, *, slots, max_len,
             "decode_degradation": round(degradation, 4)}
 
 
-def bench_migration(cfg, model, params, *, slots, max_len,
-                    sessions, nodes, prefill_chunk=16) -> dict:
+def bench_migration(cfg, model, params, *, slots, max_len, sessions, nodes,
+                    variant="handoff", chunk=16, window=6) -> dict:
+    """One node kill under one re-home strategy.  Reports both the
+    per-session re-home latency AND the decode-round time measured while
+    the migration drains (vs an idle window on the same cluster in the
+    same run — runner speed cancels in the ratio)."""
     from repro.runtime import Membership
     from repro.serve import Request, ServeCluster
 
+    prefill_chunk = None if variant == "whole" else chunk
     m = Membership(t_q=60.0, now=lambda: 0.0)
     for i in range(nodes):
         m.request_join(f"10.8.0.{i}", 7000 + i)
     cluster = ServeCluster(m, model, params, slots=slots, max_len=max_len,
-                           prefill_chunk=prefill_chunk)
-    for i, p in enumerate(_prompts(cfg, sessions, seed=3)):
-        cluster.submit(Request(f"m{i}", p, max_new_tokens=max_len - 16))
+                           prefill_chunk=prefill_chunk,
+                           kv_blocks=(variant == "handoff"),
+                           prefix_cache=False)
+    for i, p in enumerate(_long_prompts(cfg, sessions, seed=3)):
+        cluster.submit(Request(f"m{i}", p, max_new_tokens=24))
     cluster.step()                               # warm every replica's jit
     if prefill_chunk:
         # warm the (shared, fixed-shape) chunk trace so the timed event
@@ -158,30 +183,112 @@ def bench_migration(cfg, model, params, *, slots, max_len,
                         model.init_cache(1, max_len))
     by_owner: dict = {}
     for rec in cluster.sessions.values():
-        by_owner.setdefault(rec.owner, []).append(rec)
+        if not rec.done:
+            by_owner.setdefault(rec.owner, []).append(rec)
     victim = max(by_owner, key=lambda o: len(by_owner[o]))
     n_victim = len(by_owner[victim])
     t0 = time.perf_counter()
-    m.fail(victim)               # handler only INITIATES re-homes now:
-    event_s = time.perf_counter() - t0
-    steps = 0                    # chunks drain overlapped with decode
+    m.fail(victim)         # whole/handoff re-home inside the handler;
+    event_s = time.perf_counter() - t0           # chunked only INITIATES
+    steps = 0              # overlapped chunks drain with decode rounds
+    busy = []
     while cluster.pending_migrations:
+        t1 = time.perf_counter()
         cluster.step()
+        busy.append(time.perf_counter() - t1)
         steps += 1
         assert steps < 256, "overlapped re-prefills failed to drain"
     dt = time.perf_counter() - t0
+    while len(busy) < window:  # no (or short) drain: post-event rounds
+        t1 = time.perf_counter()
+        cluster.step()
+        busy.append(time.perf_counter() - t1)
+    busy_us = float(np.mean(busy)) * 1e6
+    # idle baseline AFTER the drain, on the SAME post-kill replica count
+    # (a pre-kill baseline steps one extra replica and reads as a
+    # phantom speedup); runner speed cancels in the within-run ratio
+    t1 = time.perf_counter()
+    for _ in range(window):
+        cluster.step()
+    idle_us = (time.perf_counter() - t1) / window * 1e6
+    degradation = busy_us / idle_us - 1.0
     moved = cluster.migrated_sessions
     per_session_ms = dt / max(moved, 1) * 1e3
-    emit("serve_migration_event", dt * 1e6,
+    emit(f"serve_migration_{variant}", dt * 1e6,
          f"{moved} sessions, {per_session_ms:.1f} ms/session, "
-         f"event={event_s * 1e6:.0f}us")
-    return {"nodes": nodes, "sessions": sessions,
-            "victim_sessions": n_victim, "sessions_moved": moved,
-            "prefill_chunk": prefill_chunk,
-            "event_latency_s": round(event_s, 6),
-            "drain_steps": steps,
-            "rehome_latency_s": round(dt, 4),
-            "per_session_ms": round(per_session_ms, 2)}
+         f"event={event_s * 1e6:.0f}us, drain +{degradation * 100:.1f}%")
+    row = {"variant": variant, "nodes": nodes, "sessions": sessions,
+           "victim_sessions": n_victim, "sessions_moved": moved,
+           "prefill_chunk": prefill_chunk,
+           "event_latency_s": round(event_s, 6),
+           "drain_steps": steps,
+           "rehome_latency_s": round(dt, 4),
+           "per_session_ms": round(per_session_ms, 2),
+           "idle_round_us": round(idle_us, 1),
+           "drain_round_us": round(busy_us, 1),
+           "drain_decode_degradation": round(degradation, 4)}
+    if variant == "handoff":
+        row.update({"handoffs": cluster.handoffs,
+                    "handoff_misses": cluster.handoff_misses,
+                    "handoff_chunks": cluster.handoff_chunks,
+                    "exported_blocks": cluster.exported_blocks,
+                    "block_upload_bytes": cluster.blocks.upload_bytes,
+                    "block_repair_bytes": cluster.blocks.repair_bytes})
+    return row
+
+
+def bench_prefix_cache(cfg, model, params, *, max_len, chunk=16,
+                       sessions=8) -> dict:
+    """Cold vs warm admit latency for sessions sharing a 2-chunk system
+    prompt: the first session computes and publishes the shared chunks,
+    every later one imports them and prefills only its private tail."""
+    from repro.core.ringstate import RingState
+    from repro.dht.data import BlockStore, PrefixCache
+    from repro.serve import Replica, Request
+
+    state = RingState()
+    for i in range(4):
+        state.add((i + 1) * (2**64 // 5))
+    pc = PrefixCache(BlockStore(state, replication=2), chunk=chunk,
+                     salt=cfg.name)
+    rep = Replica(model, slots=2, max_len=max_len, prefill_chunk=chunk,
+                  prefix_cache=pc)
+    rep.attach_params(params)
+    rng = np.random.default_rng(23)
+    system = rng.integers(0, cfg.vocab, 2 * chunk, dtype=np.int32)
+
+    def admit(i):
+        tail = rng.integers(0, cfg.vocab, 3 + (i % 4), dtype=np.int32)
+        t0 = time.perf_counter()
+        rep.admit(Request(f"px{i}", np.concatenate([system, tail]),
+                          max_new_tokens=2))
+        dt = (time.perf_counter() - t0) * 1e6
+        rep.evict(f"px{i}")
+        return dt
+
+    # compile the shared chunk program AND the export/insert path (a
+    # disjoint throwaway prompt, so nothing it publishes can ever hit)
+    # outside the timed admits
+    rep.admit(Request("pxwarm",
+                      np.full(2 * chunk + 3, cfg.vocab - 1, np.int32),
+                      max_new_tokens=2))
+    rep.evict("pxwarm")
+    cold_us = admit(0)       # computes + publishes the 2 shared chunks
+    warm_us = float(np.mean([admit(i) for i in range(1, sessions)]))
+    hit_rate = pc.hits / max(pc.hits + pc.misses, 1)
+    # prefill forward cost ~ 2 FLOPs per parameter per token position
+    saved_flops = 2 * model.param_count() * pc.tokens_saved
+    emit("serve_prefix_warm_admit", warm_us,
+         f"cold={cold_us:.0f}us, hit_rate={hit_rate:.2f}")
+    return {"sessions": sessions, "chunk": chunk,
+            "system_prompt_tokens": int(2 * chunk),
+            "cold_admit_us": round(cold_us, 1),
+            "warm_admit_us": round(warm_us, 1),
+            "admit_speedup": round(cold_us / warm_us, 2),
+            "prefix_hits": pc.hits, "prefix_misses": pc.misses,
+            "hit_rate": round(hit_rate, 4),
+            "tokens_saved": pc.tokens_saved,
+            "saved_prefill_flops": int(saved_flops)}
 
 
 def run(full: bool = False, out: str = "BENCH_serve.json") -> dict:
@@ -192,15 +299,23 @@ def run(full: bool = False, out: str = "BENCH_serve.json") -> dict:
     reps = 50 if full else 15
     decode = bench_decode_scaling(cfg, model, params, slots=slots,
                                   max_len=64, actives=actives, reps=reps)
-    migration = bench_migration(cfg, model, params, slots=slots, max_len=64,
-                                sessions=12 if full else 8,
-                                nodes=5 if full else 4)
+    variants = {
+        v: bench_migration(cfg, model, params, slots=slots, max_len=64,
+                           sessions=12 if full else 8,
+                           nodes=5 if full else 4, variant=v)
+        for v in ("whole", "chunked", "handoff")
+    }
+    prefix = bench_prefix_cache(cfg, model, params, max_len=64,
+                                sessions=10 if full else 8)
     concurrent = bench_concurrent_prefill(cfg, model, params, slots=slots,
                                           max_len=64, active=4, reps=reps)
     prov = provenance()
     payload = {"benchmark": "serve", "model": cfg.name,
                "mode": prov["mode"], "provenance": prov,
-               "decode": decode, "migration": migration,
+               "decode": decode,
+               "migration": variants["handoff"],   # the default serve path
+               "migration_variants": variants,
+               "prefix_cache": prefix,
                "concurrent_prefill": concurrent}
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)

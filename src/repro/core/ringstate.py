@@ -491,6 +491,20 @@ class RingState:
         idx = (start + np.arange(r)) % act.size
         return [int(v) for v in act[idx]]
 
+    def replica_sets(self, keys, r: int) -> np.ndarray:
+        """Vectorized ``replica_set`` over a key batch: (Q,) uint64 key
+        IDs -> (Q, min(r, n)) uint64 replica groups, owner first.  The
+        data plane's re-replication sweep resolves every affected
+        block's new placement in one call instead of Q bisects."""
+        act = self.active_ids()
+        if not act.size:
+            raise LookupError("empty routing table")
+        keys = np.asarray(keys, np.uint64)
+        r = min(r, act.size)
+        start = np.searchsorted(act, keys) % act.size
+        idx = (start[:, None] + np.arange(r)[None, :]) % act.size
+        return act[idx]
+
     def owner(self, key) -> int:
         from .ring import key_id
         x = key if isinstance(key, int) else key_id(key)

@@ -110,6 +110,45 @@ class Model:
             params, tokens, cache, self.cfg, index, impl=self.attn_impl,
             decode_kernel=self.decode_use_kernel, chunk=True)
 
+    # -- KV-cache blocks (DHT data plane, DESIGN.md §11) ---------------------
+    @property
+    def supports_kv_blocks(self) -> bool:
+        """True when the KV cache can be exported/imported as fixed-shape
+        position-range blocks (standard-attention transformers; MLA's
+        absorbed cache and SSM state are not position-sliceable)."""
+        return self.supports_chunked_prefill
+
+    def kv_block_shape(self, chunk: int):
+        """(2, chunk, layers, kv_heads, head_dim) slab shape — k and v
+        stacked — for one ``chunk``-position cache block."""
+        self._require_kv_blocks()
+        return transformer.kv_block_shape(self.cfg, chunk)
+
+    def export_kv_block(self, cache, row: int, off: int, chunk: int):
+        """Host numpy slab of cache positions [off, off+chunk) for batch
+        row ``row`` (the replicated data plane's wire format)."""
+        self._require_kv_blocks()
+        return transformer.export_kv_block(self.cfg, cache, row, off, chunk)
+
+    def import_kv_block(self, cache, row: int, off: int, block):
+        """Write an exported slab back into a cache (bit-faithful: decode
+        from the merged cache is token-identical to the exporter's)."""
+        self._require_kv_blocks()
+        return transformer.import_kv_block(self.cfg, cache, row, off, block)
+
+    def cache_with_blocks(self, max_len: int, blocks):
+        """Fresh 1-row cache pre-filled with a contiguous slab run from
+        position 0 — one host assembly + one device transfer per k/v,
+        instead of a dispatched set per block (the admit-latency floor
+        for cache handoffs and prefix-cache hits)."""
+        self._require_kv_blocks()
+        return transformer.cache_with_blocks(self.cfg, max_len, blocks)
+
+    def _require_kv_blocks(self) -> None:
+        if not self.supports_kv_blocks:
+            raise NotImplementedError(
+                f"family {self.cfg.family} has no KV block export path")
+
     def decode_step(self, params: Params, cache, tokens: jax.Array,
                     index) -> Tuple[jax.Array, Any]:
         """One token per sequence.  ``index`` is the current cache length:

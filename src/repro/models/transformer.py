@@ -185,6 +185,61 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
                         cache_shapes(cfg, batch, max_len))
 
 
+def kv_block_shape(cfg: ModelConfig, chunk: int) -> Tuple[int, ...]:
+    """Fixed block shape for ``chunk`` cache positions: (2, chunk,
+    layers, kv_heads, head_dim) — k and v stacked on the leading axis so
+    one DHT block carries a whole chunk's cache state."""
+    return (2, chunk, cfg.num_layers, cfg.num_kv_heads,
+            cfg.resolved_head_dim)
+
+
+def export_kv_block(cfg: ModelConfig, cache: Dict, row: int, off: int,
+                    chunk: int):
+    """Pull cache positions [off, off+chunk) of one batch row to host as
+    a (2, chunk, layers, kv_heads, head_dim) numpy slab (the data
+    plane's wire format)."""
+    import numpy as np
+    k = np.asarray(cache["k"][:, row, off:off + chunk])   # (L, c, H, D)
+    v = np.asarray(cache["v"][:, row, off:off + chunk])
+    return np.stack([k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3)])
+
+
+def cache_with_blocks(cfg: ModelConfig, max_len: int, blocks) -> Dict:
+    """Fresh single-row cache with a contiguous run of exported slabs
+    already written at positions [0, len(blocks)*chunk).
+
+    Assembled HOST-side and shipped as one device array per k/v: a
+    per-block ``.at[].set`` costs a dispatched XLA op (and a first-call
+    compile) per block, which at serve-plane block sizes is as slow as
+    just recomputing the chunk — this path is O(1) dispatches however
+    long the imported run is."""
+    import numpy as np
+    shapes = cache_shapes(cfg, 1, max_len)
+    k = np.zeros(shapes["k"].shape, shapes["k"].dtype)
+    v = np.zeros(shapes["v"].shape, shapes["v"].dtype)
+    if blocks:
+        kk = np.concatenate([b[0] for b in blocks])   # (covered, L, H, D)
+        vv = np.concatenate([b[1] for b in blocks])
+        covered = kk.shape[0]
+        k[:, 0, :covered] = kk.transpose(1, 0, 2, 3)
+        v[:, 0, :covered] = vv.transpose(1, 0, 2, 3)
+    return {"k": jnp.asarray(k), "v": jnp.asarray(v)}
+
+
+def import_kv_block(cfg: ModelConfig, cache: Dict, row: int, off: int,
+                    block) -> Dict:
+    """Write an exported slab back into cache positions [off, off+chunk)
+    of one batch row.  Bit-faithful: the imported KV is byte-identical
+    to what the exporting replica computed, so decode from the merged
+    cache is token-identical to never having moved."""
+    chunk = block.shape[1]
+    k = jnp.asarray(block[0].transpose(1, 0, 2, 3),
+                    cache["k"].dtype)[:, None]            # (L, 1, c, H, D)
+    v = jnp.asarray(block[1].transpose(1, 0, 2, 3), cache["v"].dtype)[:, None]
+    return {"k": cache["k"].at[:, row:row + 1, off:off + chunk].set(k),
+            "v": cache["v"].at[:, row:row + 1, off:off + chunk].set(v)}
+
+
 def _cache_tuple(cfg, cache_l):
     return (cache_l["c"], cache_l["r"]) if cfg.mla_kv_lora \
         else (cache_l["k"], cache_l["v"])

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Set
 import numpy as np
 
 from repro.core.ringstate import _BUCKET_MIN_N
+from repro.dht.data import BlockStore, PrefixCache, pack_array, unpack_array
 from repro.models import Model
 from repro.runtime import Membership, ReplicaSupervisor
 
@@ -54,6 +55,9 @@ class SessionRecord:
     generated: List[int] = field(default_factory=list)
     migrations: int = 0
     done: bool = False
+    # KV chunks exported to the replicated block store so far (chunk j
+    # covers cache positions [j*chunk, (j+1)*chunk) of the transcript)
+    exported_chunks: int = 0
 
     @property
     def transcript(self) -> np.ndarray:
@@ -79,7 +83,13 @@ class RequestTrace:
       * ``queue_us``  — capacity probing plus any time the session spent
         stranded waiting for a replica_set slot to free;
       * ``decode_us`` — prefill(s), including migration re-prefills, plus
-        this session's share of every decode round it took a token from.
+        this session's share of every decode round it took a token from;
+      * ``handoff_us`` — cache-TRANSFER time on migrations: fetching the
+        session's KV blocks from the replica set plus importing them
+        into the new replica's cache.  Kept apart from ``decode_us`` so
+        a handoff (transfer) and a re-prefill (recompute) migration are
+        distinguishable in the report instead of both landing in the
+        route/decode buckets.
     """
 
     submitted_ns: int = 0
@@ -87,6 +97,7 @@ class RequestTrace:
     queue_us: float = 0.0
     route_us: float = 0.0
     decode_us: float = 0.0
+    handoff_us: float = 0.0
     _stranded_ns: int = 0          # transient: set while awaiting re-home
 
     @property
@@ -110,7 +121,10 @@ class ServeCluster:
                  decode_kernel: Optional[bool] = None,
                  prefill_chunk: Optional[int] = 16,
                  prefill_duty: int = 6,
-                 fused: Optional[bool] = None):
+                 fused: Optional[bool] = None,
+                 kv_blocks: Optional[bool] = None,
+                 prefix_cache: Optional[bool] = None,
+                 block_store: Optional[BlockStore] = None):
         self.membership = membership
         self.state = membership.ring_state
         self.model = model if decode_kernel is None else \
@@ -144,6 +158,30 @@ class ServeCluster:
         # overlapped migration re-prefills in flight: sid -> target node
         self._pending_homes: Dict[str, Dict] = {}
         self._retry: Set[str] = set()      # sids needing an off-event re-home
+        # DHT-backed KV data plane (DESIGN.md §11): None = auto (on when
+        # the family exports KV blocks and prefill is chunked).  The
+        # store replicates every session's full KV chunks across the
+        # ring, so migration becomes a cache HANDOFF (fetch + tail
+        # re-prefill) instead of a transcript recompute; the prefix
+        # cache shares prompt-prefix chunks across sessions.
+        want_kv = kv_blocks if kv_blocks is not None else \
+            bool(self.prefill_chunk) and model.supports_kv_blocks
+        self.blocks: Optional[BlockStore] = None
+        self.prefix: Optional[PrefixCache] = None
+        if want_kv:
+            if not (self.prefill_chunk and model.supports_kv_blocks):
+                raise ValueError("kv_blocks needs a chunk-prefill family "
+                                 "and a prefill_chunk size")
+            self.blocks = block_store if block_store is not None else \
+                BlockStore(self.state, replication=replication)
+            if prefix_cache is None or prefix_cache:
+                self.prefix = PrefixCache(self.blocks,
+                                          chunk=self.prefill_chunk,
+                                          salt=model.cfg.name)
+        self.handoffs = 0              # migrations served from KV blocks
+        self.handoff_misses = 0        # block fetches that found nothing
+        self.handoff_chunks = 0        # chunks imported instead of recomputed
+        self.exported_blocks = 0       # chunks shipped into the store
         self.fused_rounds = 0
         self.fused_routed_keys = 0
         # fused-route owners that differ from the control plane's record:
@@ -173,7 +211,8 @@ class ServeCluster:
         if rep is None:
             rep = Replica(self.model, slots=self.slots, max_len=self.max_len,
                           generation=self.supervisor.stamp(),
-                          prefill_chunk=self.prefill_chunk)
+                          prefill_chunk=self.prefill_chunk,
+                          prefix_cache=self.prefix)
             rep.attach_params(self.params)
             self.replicas[node] = rep
         return rep
@@ -229,8 +268,57 @@ class ServeCluster:
             queue_us=(t_queue - t_route) / 1e3,
             decode_us=(t_admit - t_queue) / 1e3)
         self.sessions[req.session_id] = rec
+        self._export_session(rec)      # replicate the prompt's KV chunks
         self._push_token(rec, tok)
         return tok
+
+    # -- KV data plane (DESIGN.md §11) ----------------------------------------
+    @staticmethod
+    def _block_name(session_id: str, j: int) -> str:
+        return f"kv/{session_id}/{j}"
+
+    def _export_session(self, rec: SessionRecord) -> None:
+        """Ship every newly completed KV chunk of the session's live
+        cache into the replicated store (put = r-way successor write).
+        These blocks are what make a later migration a cache handoff:
+        they survive the owner's death on its replica set."""
+        if self.blocks is None or rec.done:
+            return
+        rep = self._live_replica(rec.owner)
+        if rep is None:
+            return
+        slot = rep.sessions.get(rec.session_id)
+        if slot is None:
+            return
+        c = self.prefill_chunk
+        full = int(rep.lengths[slot]) // c
+        for j in range(rec.exported_chunks, full):
+            self.blocks.put(self._block_name(rec.session_id, j),
+                            pack_array(rep.export_block(rec.session_id, j)))
+            self.exported_blocks += 1
+        rec.exported_chunks = max(rec.exported_chunks, full)
+
+    def _fetch_blocks(self, rec: SessionRecord, s: int) -> List[np.ndarray]:
+        """The longest contiguous run of the session's stored KV chunks,
+        capped so the final prompt segment is always recomputed (its
+        all-position logits carry the admit token)."""
+        c = self.prefill_chunk
+        cap = max(((s - 1) // c) * c, 0)
+        blocks: List[np.ndarray] = []
+        while (len(blocks) + 1) * c <= cap:
+            data = self.blocks.get(self._block_name(rec.session_id,
+                                                    len(blocks)))
+            if data is None:
+                break
+            blocks.append(unpack_array(data))
+        return blocks
+
+    def _drop_session_blocks(self, rec: SessionRecord) -> None:
+        if self.blocks is None:
+            return
+        for j in range(rec.exported_chunks):
+            self.blocks.remove(self._block_name(rec.session_id, j))
+        rec.exported_chunks = 0
 
     def _push_token(self, rec: SessionRecord, tok: int) -> None:
         rec.generated.append(tok)
@@ -242,6 +330,9 @@ class ServeCluster:
             rep = self.replicas.get(rec.owner)
             if rep is not None:
                 rep.evict(rec.session_id)
+            self._drop_session_blocks(rec)   # a finished session's KV is
+            # dead weight on r nodes — reclaim it (prefix chunks persist:
+            # they are content-addressed, not session-owned)
 
     # -- decode loop -----------------------------------------------------------
     def _route_table(self):
@@ -316,6 +407,13 @@ class ServeCluster:
                     trace.route_us += share_route
                 self._push_token(self.sessions[sid], tok)
                 out[sid] = tok
+        if self.blocks is not None and duty_turn:
+            # decode rounds advance lengths across chunk boundaries;
+            # ship the newly completed chunks on the same duty beat the
+            # prefill scheduler uses, bounding the export sync cost to
+            # ~1/duty of rounds
+            for rec in self.live_sessions:
+                self._export_session(rec)
         return out
 
     def _note_owner_divergence(self, rep: Replica) -> None:
@@ -402,6 +500,14 @@ class ServeCluster:
             # supervisor pinned its generation, so the slab could never
             # be resumed anyway — reclaim it instead of hoarding KV
             self.replicas.pop(ev.subject_id, None)
+            if self.blocks is not None and ev.kind == "leave":
+                # a detected failure takes the node's block copies with
+                # it (quarantine keeps them: the peer is alive, §V)
+                self.blocks.drop_node(ev.subject_id)
+        if self.blocks is not None:
+            # re-replicate exactly the affected blocks BEFORE re-homing
+            # sessions: the handoff fetch below must find r live copies
+            self.blocks.sync()
         self._migrate_affected()
 
     def _migrate_affected(self) -> int:
@@ -475,6 +581,10 @@ class ServeCluster:
             trace._stranded_ns = 0
         rep = self._replica_for(new_owner)
         req = Request(rec.session_id, rec.transcript, rec.max_new_tokens)
+        if self.blocks is not None and rep._chunkable(len(req.prompt)) \
+                and self._handoff_from_blocks(rec, rep, req, resident,
+                                              new_owner, trace):
+            return
         if not resident and rep._chunkable(len(req.prompt)):
             # the old slab is gone, so nobody is decoding this session:
             # re-prefill it one fixed-shape chunk per round, OVERLAPPED
@@ -500,6 +610,52 @@ class ServeCluster:
         self.migrated_sessions += 1
         self._push_token(rec, tok)
 
+    def _handoff_from_blocks(self, rec: SessionRecord, rep: Replica,
+                             req: Request, resident: bool, new_owner: int,
+                             trace: Optional[RequestTrace]) -> bool:
+        """Zero-recompute cache handoff: fetch the session's KV chunks
+        from their replica sets and admit from them — only the final
+        prompt segment is re-prefilled.  Returns False on a total block
+        miss (or an import failure), sending the caller down the
+        re-prefill paths; the migration then costs recompute but never
+        correctness."""
+        if resident:
+            # the old slab is still live (quarantine / spill): flush its
+            # newest chunks into the store first so the transfer covers
+            # the whole transcript, not just the last duty-beat export
+            self._export_session(rec)
+        t0 = time.perf_counter_ns()
+        blocks = self._fetch_blocks(rec, len(req.prompt))
+        if not blocks:
+            self.handoff_misses += 1
+            return False
+        fetch_us = (time.perf_counter_ns() - t0) / 1e3
+        t1 = time.perf_counter_ns()
+        try:
+            tok = rep.admit_from_blocks(req, blocks)
+        except Exception:
+            # a torn/mismatched block import must degrade to recompute,
+            # never kill the migration batch
+            self.handoff_misses += 1
+            return False
+        admit_us = (time.perf_counter_ns() - t1) / 1e3
+        if trace is not None:
+            trace.handoff_us += fetch_us + rep.import_us
+            trace.decode_us += max(admit_us - rep.import_us, 0.0)
+        self.handoffs += 1
+        self.handoff_chunks += len(blocks)
+        if resident:
+            self.replicas[rec.owner].evict(rec.session_id)
+        # chunks up to the fetched run are still stored and content-
+        # valid; anything past it (a lost block broke the run) will be
+        # re-exported from the new slab on the next duty beat
+        rec.exported_chunks = len(blocks)
+        rec.owner = new_owner
+        rec.migrations += 1
+        self.migrated_sessions += 1
+        self._push_token(rec, tok)
+        return True
+
     # -- observability -----------------------------------------------------------
     def latency_report(self) -> Dict[str, float]:
         """Serve-path request-latency distribution with the queue/route/
@@ -522,6 +678,8 @@ class ServeCluster:
                 float(np.mean([t.route_us for t in done])), 1),
             "decode_us_mean": round(
                 float(np.mean([t.decode_us for t in done])), 1),
+            "handoff_us_mean": round(
+                float(np.mean([t.handoff_us for t in done])), 1),
             "router_route_us_per_key": round(
                 self.router.route_us_per_key, 2),
         }
@@ -532,7 +690,7 @@ class ServeCluster:
         (two-level bucket index at scale, flat scan below it — §7), so
         ``route_upload_bytes`` IS the maintenance traffic this cluster's
         membership churn has cost the device so far."""
-        return {
+        out = {
             "sessions": len(self.sessions),
             "live": len(self.live_sessions),
             "replicas": len(self.replicas),
@@ -543,3 +701,19 @@ class ServeCluster:
             "route_upload_bytes": self.state.upload_bytes,
             "route_delta_uploads": self.state.delta_uploads,
         }
+        if self.blocks is not None:
+            out.update({
+                "handoffs": self.handoffs,
+                "handoff_misses": self.handoff_misses,
+                "handoff_chunks": self.handoff_chunks,
+                "exported_blocks": self.exported_blocks,
+                "block_upload_bytes": self.blocks.upload_bytes,
+                "block_repair_bytes": self.blocks.repair_bytes,
+            })
+        if self.prefix is not None:
+            out.update({
+                "prefix_hits": self.prefix.hits,
+                "prefix_misses": self.prefix.misses,
+                "prefix_tokens_saved": self.prefix.tokens_saved,
+            })
+        return out

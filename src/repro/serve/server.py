@@ -196,11 +196,20 @@ class Replica:
     """
 
     def __init__(self, model: Model, *, slots: int, max_len: int,
-                 generation: int = 0, prefill_chunk: Optional[int] = None):
+                 generation: int = 0, prefill_chunk: Optional[int] = None,
+                 prefix_cache=None):
         self.model = model
         self.slots = slots
         self.max_len = max_len
         self.generation = generation     # membership generation at creation
+        # content-addressed cross-session prompt-prefix cache
+        # (repro.dht.data.PrefixCache or None): chunked prefills consult
+        # it before computing a chunk and insert what they computed
+        self.prefix_cache = prefix_cache \
+            if model.supports_kv_blocks else None
+        # wall time the last admit_from_blocks spent importing blocks
+        # (the cluster splits handoff-transfer from re-prefill with it)
+        self.import_us = 0.0
         self.cache = model.init_cache(slots, max_len)
         self.lengths = np.zeros((slots,), np.int32)
         self.tokens = np.zeros((slots, 1), np.int32)
@@ -295,23 +304,97 @@ class Replica:
         return bool(c) and self._prefill_chunk is not None \
             and (s + c - 1) // c * c <= self.max_len
 
-    def _run_chunks(self, prompt: np.ndarray, one) -> Tuple[int, object]:
-        """Drive the fixed-shape segment program over a whole prompt
-        (synchronous variant of the overlapped path); returns (first
-        generated token, filled 1-row cache)."""
+    def _run_chunks(self, prompt: np.ndarray, one, *,
+                    start: int = 0) -> Tuple[int, object]:
+        """Drive the fixed-shape segment program over a prompt from cache
+        position ``start`` (0 = whole prompt; > 0 continues over a cache
+        whose first ``start`` positions were imported from KV blocks);
+        returns (first generated token, filled 1-row cache).
+
+        With a prefix cache attached and ``start == 0``, the longest
+        cached token-prefix is imported instead of computed — a hit on a
+        shared system prompt skips those chunks' prefill FLOPs entirely
+        — and every freshly computed full chunk is offered back."""
         c = self.prefill_chunk
         s = len(prompt)
+        if start == 0 and self.prefix_cache is not None:
+            covered, blocks = self.prefix_cache.match(prompt)
+            if covered:
+                # replace the caller's zero cache with one assembled
+                # host-side around the imported run (a dispatched set per
+                # block would cost as much as recomputing the chunk)
+                one = self.model.cache_with_blocks(self.max_len, blocks)
+                start = covered
         padded = (s + c - 1) // c * c
         buf = np.zeros(padded, np.int32)
         buf[:s] = prompt
         logits = None
-        for off in range(0, padded, c):
+        for off in range(start, padded, c):
             seg = jnp.asarray(buf[off:off + c], jnp.int32)[None, :]
             logits, one = self._prefill_chunk(self.params, seg, one, off)
+            if self.prefix_cache is not None and off + c <= s:
+                self.prefix_cache.insert(
+                    prompt, off, self.model.export_kv_block(one, 0, off, c))
         # the prompt's last real token sits at column (s-1) - (padded-c)
         # of the final (right-padded) segment's all-position logits
         tok = int(jnp.argmax(logits[0, (s - 1) - (padded - c)]))
         return tok, one
+
+    def admit_from_blocks(self, req: Request, blocks) -> int:
+        """Admit from imported KV blocks: cache positions
+        [0, len(blocks)*chunk) come off the wire (a replica-set fetch),
+        only the remaining tail of the prompt is re-prefilled.  The
+        blocks are bit-identical to what this replica would have
+        computed, so the returned token — and every decode after it —
+        matches a from-scratch admit exactly.  Degrades to ``admit``
+        when no blocks are given; the same rollback discipline applies
+        (a failed import or tail prefill leaks no slot)."""
+        if not blocks:
+            return self.admit(req)
+        s = len(req.prompt)
+        c = self.prefill_chunk
+        if not self._chunkable(s):
+            raise ValueError("prompt not chunkable on this replica")
+        covered = len(blocks) * c
+        if covered > max(((s - 1) // c) * c, 0):
+            raise ValueError("blocks cover the final segment: the tail "
+                             "must be recomputed to produce logits")
+        if s >= self.max_len:
+            raise ValueError(f"prompt of {s} tokens >= max_len {self.max_len}")
+        fresh = False
+        if req.session_id in self.sessions:
+            slot = self.sessions[req.session_id]
+        elif self._free:
+            slot = self._free.pop()
+            self.sessions[req.session_id] = slot
+            fresh = True
+        else:
+            raise RuntimeError("replica full")
+        try:
+            t0 = time.perf_counter_ns()
+            one = self.model.cache_with_blocks(self.max_len, blocks)
+            jax.block_until_ready(jax.tree.leaves(one)[0])
+            self.import_us = (time.perf_counter_ns() - t0) / 1e3
+            tok, one = self._run_chunks(req.prompt, one, start=covered)
+            self._write_slot(one, slot)
+            self._commit_slot(req.session_id, slot, s, tok)
+        except BaseException:
+            if fresh:
+                del self.sessions[req.session_id]
+                self._free.append(slot)
+                self.active[slot] = False
+                self.lengths[slot] = 0
+                self.tokens[slot, 0] = 0
+            raise
+        return tok
+
+    def export_block(self, session_id: str, j: int) -> np.ndarray:
+        """Chunk ``j`` of the session's live cache as a host slab
+        (positions [j*chunk, (j+1)*chunk) — the caller guarantees the
+        session's length has crossed that boundary)."""
+        slot = self.sessions[session_id]
+        c = self.prefill_chunk
+        return self.model.export_kv_block(self.cache, slot, j * c, c)
 
     def _commit_slot(self, session_id: str, slot: int, s: int,
                      tok: int) -> None:
@@ -347,10 +430,23 @@ class Replica:
         padded = (s + c - 1) // c * c
         buf = np.zeros(padded, np.int32)
         buf[:s] = np.asarray(req.prompt, np.int32)
-        self._pending[req.session_id] = {
-            "slot": slot, "cache": self.model.init_cache(1, self.max_len),
+        st = {
+            "slot": slot, "cache": None,
             "prompt": buf, "s": s, "off": 0, "logits": None,
         }
+        if self.prefix_cache is not None:
+            # overlapped admits hit the cross-session prefix cache too:
+            # imported chunks are chunks the duty-cycle never has to
+            # advance (inserts stay on the synchronous path only)
+            covered, blocks = self.prefix_cache.match(
+                np.asarray(req.prompt, np.int32))
+            if covered:
+                st["cache"] = self.model.cache_with_blocks(self.max_len,
+                                                           blocks)
+                st["off"] = covered
+        if st["cache"] is None:
+            st["cache"] = self.model.init_cache(1, self.max_len)
+        self._pending[req.session_id] = st
         return None
 
     @property

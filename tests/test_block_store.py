@@ -1,0 +1,356 @@
+"""Replicated KV-block data plane (DESIGN.md §11): the dict-of-dicts
+oracle twin-check over arbitrary churn sequences.
+
+The properties under test (ISSUE 7 satellite):
+
+  * **replication invariant** — after any sequence of puts/overwrites/
+    removes interleaved with joins, graceful leaves, crashes, and same-ID
+    rejoins, a single ``sync()`` (convergence) restores every live block
+    to ``min(r, live peers)`` live, checksum-valid, up-to-date copies on
+    exactly its current replica set;
+  * **no torn or stale reads** — ``get`` always returns the last value
+    the oracle wrote (or None once removed/lost), never an old version
+    surfaced by a rejoining disk and never a checksum-broken copy;
+  * **tombstones** — a removed block stays dead even when a stale copy
+    rejoins later;
+  * **O(affected) repair traffic** — a sync with no membership change
+    since the previous one checks zero keys and copies zero bytes.
+
+The hypothesis property skips when hypothesis is absent (the runtime
+image bakes in jax + numpy only); the fixed-seed randomized twin below
+always runs and covers the same invariants.
+"""
+import numpy as np
+import pytest
+
+from repro.core.ringstate import RingState
+from repro.dht.data import (BlockMeta, BlockStore, PrefixCache, pack_array,
+                            unpack_array)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+R = 3
+# small spread-out id pool so replica sets are controllable
+POOL = [(i + 1) * (2**64 // 12) % 2**64 for i in range(11)]
+KEYS = [(i * 2**64) // 7 + 5 for i in range(7)]
+
+
+def _fresh(n=6):
+    state = RingState()
+    for pid in POOL[:n]:
+        state.add(pid)
+    return state, BlockStore(state, replication=R)
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["float32", "float16", "int32", "uint8"])
+def test_pack_roundtrip(dtype):
+    arr = (np.arange(24).reshape(2, 3, 4) % 7).astype(dtype)
+    out = unpack_array(pack_array(arr))
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_pack_rejects_foreign_bytes():
+    with pytest.raises(ValueError):
+        unpack_array(b"not a block")
+
+
+def test_block_meta_integrity():
+    meta = BlockMeta.of(3, b"payload")
+    assert meta.valid(b"payload")
+    assert not meta.valid(b"payloaX")
+    assert not meta.valid(b"payload-longer")
+
+
+# ---------------------------------------------------------------------------
+# core semantics
+# ---------------------------------------------------------------------------
+
+def test_put_places_on_replica_set_and_meters_uploads():
+    state, store = _fresh()
+    value = b"x" * 100
+    store.put(KEYS[0], value)
+    group = state.replica_set(KEYS[0], R)
+    assert len(group) == R
+    for node in group:
+        meta, stored = store._nodes[node][KEYS[0]]
+        assert stored == value and meta.version == 1
+    assert store.upload_bytes == len(value) * R
+    assert store.get(KEYS[0]) == value
+
+
+def test_overwrite_bumps_version_everywhere():
+    _, store = _fresh()
+    store.put(KEYS[0], b"v1")
+    meta = store.put(KEYS[0], b"v2")
+    assert meta.version == 2
+    assert store.get(KEYS[0]) == b"v2"
+    assert all(c == R for c in store.replica_counts().values())
+
+
+def test_remove_buries_and_blocks_resurrection():
+    state, store = _fresh()
+    store.put(KEYS[1], b"secret")
+    holder = state.replica_set(KEYS[1], R)[0]
+    state.remove(holder)                    # graceful leave: disk intact
+    assert store.remove(KEYS[1])
+    state.add(holder)                       # same-ID rejoin, stale copy
+    assert store.get(KEYS[1]) is None       # tombstone wins
+    store.sync()
+    assert store.get(KEYS[1]) is None
+    assert not store.contains(KEYS[1])
+
+
+def test_put_after_remove_supersedes_tombstone():
+    _, store = _fresh()
+    store.put(KEYS[2], b"a")
+    store.remove(KEYS[2])
+    store.put(KEYS[2], b"b")
+    assert store.get(KEYS[2]) == b"b"
+
+
+def test_corrupt_copy_discarded_and_repaired():
+    state, store = _fresh()
+    store.put(KEYS[3], b"clean-bytes")
+    victim = state.replica_set(KEYS[3], R)[1]
+    meta, _ = store._nodes[victim][KEYS[3]]
+    store._nodes[victim][KEYS[3]] = (meta, b"torn bytes!")   # bit rot
+    assert store.get(KEYS[3]) == b"clean-bytes"
+    assert store.corrupt_copies == 1
+    # the read repaired the torn member back to the clean value
+    assert store._nodes[victim][KEYS[3]][1] == b"clean-bytes"
+    assert all(c == R for c in store.replica_counts().values())
+
+
+def test_stale_rejoin_read_repairs_to_newest():
+    state, store = _fresh()
+    store.put(KEYS[4], b"old")
+    holder = state.replica_set(KEYS[4], R)[0]
+    state.remove(holder)                    # leave keeps the disk
+    store.sync()
+    store.put(KEYS[4], b"new")
+    state.add(holder)                       # stale v1 copy resurfaces
+    assert store.get(KEYS[4]) == b"new"     # never the stale version
+    store.sync()
+    assert all(c == R for c in store.replica_counts().values())
+
+
+def test_crash_destroys_disk_and_sync_restores_r_copies():
+    state, store = _fresh()
+    store.put(KEYS[5], b"p" * 64)
+    victim = state.replica_set(KEYS[5], R)[0]
+    state.remove(victim)
+    store.drop_node(victim)                 # crash: no disk to rejoin
+    stats = store.sync()
+    assert stats["repaired"] >= 1 and stats["lost"] == 0
+    assert store.get(KEYS[5]) == b"p" * 64
+    assert all(c == R for c in store.replica_counts().values())
+
+
+def test_simultaneous_loss_of_all_replicas_is_surfaced():
+    state, store = _fresh()
+    store.put(KEYS[6], b"doomed")
+    for node in state.replica_set(KEYS[6], R):
+        state.remove(node)
+        store.drop_node(node)
+    stats = store.sync()
+    assert stats["lost"] == 1 and store.lost_blocks == 1
+    assert store.get(KEYS[6]) is None
+    assert KEYS[6] not in store._placement  # no ghost placement entry
+
+
+def test_sync_without_churn_is_free():
+    _, store = _fresh()
+    for k in KEYS:
+        store.put(k, b"y" * 32)
+    store.sync()
+    stats = store.sync()                    # no membership change between
+    assert stats == {"checked": 0, "repaired": 0,
+                     "copied_bytes": 0, "lost": 0}
+
+
+def test_string_names_hash_into_keyspace():
+    _, store = _fresh()
+    store.put("kv/sess-1/0", b"named")
+    assert store.get("kv/sess-1/0") == b"named"
+    assert store.contains("kv/sess-1/0")
+    arr = np.arange(6, dtype=np.float32).reshape(2, 3)
+    store.put_array("kv/sess-1/1", arr)
+    np.testing.assert_array_equal(store.get_array("kv/sess-1/1"), arr)
+
+
+# ---------------------------------------------------------------------------
+# churn-sequence oracle twin (fixed seed — always runs)
+# ---------------------------------------------------------------------------
+
+def _apply_op(state, store, oracle, disks, op):
+    """One churn/data op against both the store and the python oracle.
+    ``oracle`` maps key -> expected bytes; ``disks`` tracks which left
+    peers still hold a disk (graceful leave vs crash)."""
+    kind = op[0]
+    if kind == "put":
+        _, key, payload = op
+        store.put(key, payload)
+        oracle[key] = payload
+    elif kind == "remove":
+        _, key = op
+        store.remove(key)
+        oracle.pop(key, None)
+    elif kind == "leave":
+        _, pid = op
+        if len(state) > R:
+            state.remove(pid)
+            disks.add(pid)
+    elif kind == "crash":
+        _, pid = op
+        if len(state) > R:
+            state.remove(pid)
+            store.drop_node(pid)
+            disks.discard(pid)
+    elif kind == "rejoin":
+        _, pid = op
+        state.add(pid)
+        disks.discard(pid)
+    elif kind == "sync":
+        store.sync()
+
+
+def _check_converged(state, store, oracle):
+    store.sync()
+    live = len(state)
+    for key, expected in oracle.items():
+        assert store.get(key) == expected, "stale or torn read"
+    counts = store.replica_counts()
+    for key in oracle:
+        assert counts.get(key, 0) == min(R, live), \
+            f"key {key}: {counts.get(key)} live replicas, want {min(R, live)}"
+    # removed keys stay dead
+    for key in set(counts) - set(oracle):
+        assert store.get(key) is None
+
+
+def _op_stream(rng, n_ops):
+    ops = []
+    for _ in range(n_ops):
+        roll = rng.random()
+        if roll < 0.40:
+            ops.append(("put", KEYS[int(rng.integers(len(KEYS)))],
+                        bytes(rng.integers(0, 256, size=int(
+                            rng.integers(1, 64))).astype(np.uint8))))
+        elif roll < 0.50:
+            ops.append(("remove", KEYS[int(rng.integers(len(KEYS)))]))
+        elif roll < 0.65:
+            ops.append(("leave", POOL[int(rng.integers(len(POOL)))]))
+        elif roll < 0.80:
+            ops.append(("crash", POOL[int(rng.integers(len(POOL)))]))
+        elif roll < 0.92:
+            ops.append(("rejoin", POOL[int(rng.integers(len(POOL)))]))
+        else:
+            ops.append(("sync",))
+    return ops
+
+
+def test_replication_invariant_randomized_twin():
+    rng = np.random.default_rng(11)
+    for trial in range(25):
+        state, store = _fresh()
+        oracle, disks = {}, set()
+        for op in _op_stream(rng, int(rng.integers(5, 40))):
+            _apply_op(state, store, oracle, disks, op)
+        _check_converged(state, store, oracle)
+
+
+if HAVE_HYPOTHESIS:
+    _key_st = st.sampled_from(KEYS)
+    _pid_st = st.sampled_from(POOL)
+    _op_st = st.one_of(
+        st.tuples(st.just("put"), _key_st,
+                  st.binary(min_size=1, max_size=48)),
+        st.tuples(st.just("remove"), _key_st),
+        st.tuples(st.just("leave"), _pid_st),
+        st.tuples(st.just("crash"), _pid_st),
+        st.tuples(st.just("rejoin"), _pid_st),
+        st.tuples(st.just("sync")),
+    )
+
+    @settings(max_examples=60, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(_op_st, max_size=40))
+    def test_hypothesis_replication_invariant(ops):
+        """After ANY churn sequence plus convergence, every live block
+        has min(r, live) live up-to-date replicas and reads match the
+        oracle exactly."""
+        state, store = _fresh()
+        oracle, disks = {}, set()
+        for op in ops:
+            _apply_op(state, store, oracle, disks, op)
+        _check_converged(state, store, oracle)
+
+
+# ---------------------------------------------------------------------------
+# prefix cache
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_content_addressing():
+    _, store = _fresh()
+    pc = PrefixCache(store, chunk=4, salt="m0")
+    shared = np.arange(12, dtype=np.int32)
+    blk = np.full((2, 4), 7, np.float32)
+    pc.insert(shared, 0, blk)
+    pc.insert(shared, 4, np.full((2, 4), 8, np.float32))
+    # a DIFFERENT session with the same first 8 tokens hits both chunks
+    other = np.concatenate([shared[:8], np.array([99, 98, 97, 96, 95],
+                                                 np.int32)])
+    covered, blocks = pc.match(other)
+    assert covered == 8 and len(blocks) == 2
+    np.testing.assert_array_equal(blocks[0], blk)
+    # diverging at token 5 kills the second chunk (whole-prefix hashing)
+    fork = shared.copy()
+    fork[5] = 1000
+    covered, blocks = pc.match(fork)
+    assert covered == 4 and len(blocks) == 1
+
+
+def test_prefix_cache_never_covers_final_segment():
+    _, store = _fresh()
+    pc = PrefixCache(store, chunk=4)
+    toks = np.arange(8, dtype=np.int32)
+    pc.insert(toks, 0, np.zeros((1, 4), np.float32))
+    pc.insert(toks, 4, np.zeros((1, 4), np.float32))  # past max_cover: dropped
+    assert pc.max_cover(8) == 4
+    covered, blocks = pc.match(toks)
+    assert covered == 4 and len(blocks) == 1          # final segment computed
+    assert pc.max_cover(9) == 8
+    assert pc.max_cover(4) == 0 and pc.max_cover(1) == 0
+
+
+def test_prefix_cache_salt_isolates_models():
+    _, store = _fresh()
+    a = PrefixCache(store, chunk=4, salt="model-a")
+    b = PrefixCache(store, chunk=4, salt="model-b")
+    toks = np.arange(9, dtype=np.int32)
+    a.insert(toks, 0, np.ones((1, 4), np.float32))
+    covered, _ = b.match(toks)
+    assert covered == 0                     # another checkpoint never hits
+    covered, _ = a.match(toks)
+    assert covered == 4
+
+
+def test_prefix_cache_counters():
+    _, store = _fresh()
+    pc = PrefixCache(store, chunk=2)
+    toks = np.arange(7, dtype=np.int32)
+    for off in (0, 2, 4):
+        pc.insert(toks, off, np.float32(off) * np.ones((1, 2), np.float32))
+    assert pc.misses == 3
+    covered, blocks = pc.match(toks)
+    assert covered == 6 and pc.hits == 3 and pc.tokens_saved == 6

@@ -1,0 +1,295 @@
+"""DHT-backed KV data plane on the serve path (DESIGN.md §11):
+cache-handoff migration and the cross-session prefix cache.
+
+The acceptance properties (ISSUE 7):
+
+  * ``admit_from_blocks`` is bit-faithful: admitting from exported KV
+    blocks returns the SAME first token — and the same decode stream —
+    as a from-scratch admit (the imported cache is byte-identical to
+    what the replica would have computed);
+  * a node kill turns migration into a cache handoff (``handoffs`` > 0,
+    ``handoff_us`` recorded in the trace) with token-identical output
+    through the boundary; a total block miss falls back to re-prefill
+    with the same output;
+  * a prefix-cache hit skips the shared chunks' prefill calls entirely
+    while still producing token-identical decode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.ringstate import RingState
+from repro.dht.data import BlockStore, PrefixCache
+from repro.models import Model
+from repro.runtime import Membership
+from repro.serve import Replica, Request, ServeCluster
+
+CHUNK = 8
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = get_smoke_config("qwen2.5-3b").with_overrides(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _membership(n, t):
+    m = Membership(t_q=60.0, now=lambda: t[0])
+    for i in range(n):
+        m.request_join(f"10.4.0.{i}", 7100 + i)
+    return m
+
+
+def _requests(cfg, count, *, max_new=8, seed=0):
+    """Prompts of 9..21 tokens: every session crosses at least one
+    CHUNK=8 boundary, so its KV chunks are exported into the store."""
+    rng = np.random.default_rng(seed)
+    return [Request(f"h{i}",
+                    rng.integers(0, cfg.vocab, 9 + (i % 5) * 3,
+                                 dtype=np.int32),
+                    max_new_tokens=max_new)
+            for i in range(count)]
+
+
+def _reference_tokens(model, params, prompt, steps, max_len):
+    cache = model.init_cache(1, max_len)
+    logits, cache = jax.jit(model.prefill)(
+        params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]}, cache)
+    toks = [int(jnp.argmax(logits[0]))]
+    dec = jax.jit(model.decode_step)
+    length = len(prompt)
+    for _ in range(steps - 1):
+        logits, cache = dec(params, cache,
+                            jnp.asarray([[toks[-1]]], jnp.int32),
+                            jnp.asarray([length], jnp.int32))
+        toks.append(int(jnp.argmax(logits[0])))
+        length += 1
+    return toks
+
+
+def _prefix_store():
+    state = RingState()
+    for i in range(4):
+        state.add((i + 1) * (2**64 // 5))
+    return BlockStore(state, replication=2)
+
+
+# ---------------------------------------------------------------------------
+# replica-level block export/import
+# ---------------------------------------------------------------------------
+
+def test_admit_from_blocks_matches_admit(smoke_model):
+    """Export a 20-token session's two full chunks from one replica,
+    admit from them on another: first token and every decode after it
+    match a from-scratch admit exactly."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(21)
+    prompt = rng.integers(0, cfg.vocab, 20, dtype=np.int32)
+    a = Replica(model, slots=2, max_len=48, prefill_chunk=CHUNK)
+    a.attach_params(params)
+    tok_a = a.admit(Request("x", prompt, max_new_tokens=6))
+    blocks = [a.export_block("x", j) for j in range(20 // CHUNK)]
+    assert all(b.shape == model.kv_block_shape(CHUNK) for b in blocks)
+
+    b = Replica(model, slots=2, max_len=48, prefill_chunk=CHUNK)
+    b.attach_params(params)
+    tok_b = b.admit_from_blocks(Request("x", prompt, max_new_tokens=6),
+                                blocks)
+    assert tok_b == tok_a
+    assert b.import_us > 0.0
+    stream_a = [tok_a] + [a.decode_round()["x"] for _ in range(5)]
+    stream_b = [tok_b] + [b.decode_round()["x"] for _ in range(5)]
+    want = _reference_tokens(model, params, prompt, 6, 48)
+    assert stream_a == want and stream_b == want
+
+
+def test_admit_from_blocks_guards(smoke_model):
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(22)
+    prompt = rng.integers(0, cfg.vocab, 16, dtype=np.int32)
+    a = Replica(model, slots=2, max_len=48, prefill_chunk=CHUNK)
+    a.attach_params(params)
+    a.admit(Request("x", prompt))
+    blocks = [a.export_block("x", 0), a.export_block("x", 1)]
+    b = Replica(model, slots=2, max_len=48, prefill_chunk=CHUNK)
+    b.attach_params(params)
+    with pytest.raises(ValueError):
+        # 2 blocks cover positions [0,16) == the whole 16-token prompt:
+        # the final segment would never run, so no logits to admit with
+        b.admit_from_blocks(Request("y", prompt), blocks)
+    # no blocks degrades to a plain admit
+    assert b.admit_from_blocks(Request("y", prompt), []) == \
+        a.admit(Request("z", prompt))
+    # a failed import (garbage block) leaks no slot
+    free_before = b.num_free
+    with pytest.raises(Exception):
+        b.admit_from_blocks(Request("w", prompt),
+                            [np.zeros((3, 3), np.float32)])
+    assert b.num_free == free_before
+    assert "w" not in b.sessions
+
+
+# ---------------------------------------------------------------------------
+# cluster-level cache-handoff migration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_kill_migrates_via_cache_handoff(smoke_model):
+    """A replica kill re-homes its sessions by FETCHING their KV chunks
+    from the block store — not recomputing them — with token-identical
+    decode through the boundary and the transfer time split out of the
+    trace as ``handoff_us``."""
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(5, t)
+    cluster = ServeCluster(m, model, params, slots=16, max_len=64,
+                           prefill_chunk=CHUNK)
+    assert cluster.blocks is not None      # auto-on for this family
+    for r in _requests(cfg, 10, max_new=8):
+        cluster.submit(r)
+    assert cluster.exported_blocks > 0     # prompt chunks replicated
+
+    by_owner = {}
+    for rec in cluster.sessions.values():
+        by_owner.setdefault(rec.owner, []).append(rec)
+    victim = max(by_owner, key=lambda o: len(by_owner[o]))
+    moved = [rec.session_id for rec in by_owner[victim]]
+    m.fail(victim)
+
+    assert cluster.handoffs >= 1
+    assert cluster.handoff_chunks >= 1
+    handed = [sid for sid in moved if cluster.traces[sid].handoff_us > 0]
+    assert handed, "no migrated session recorded handoff transfer time"
+    cluster.run()
+    for rec in cluster.sessions.values():
+        want = _reference_tokens(model, params, rec.prompt, 8, 64)
+        assert rec.generated == want, f"{rec.session_id} diverged"
+    report = cluster.latency_report()
+    assert report["handoff_us_mean"] > 0
+    stats = cluster.stats()
+    assert stats["handoffs"] == cluster.handoffs
+    assert stats["block_upload_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_handoff_miss_falls_back_to_reprefill(smoke_model):
+    """Every stored block of the victim's sessions is dropped before the
+    kill: the handoff misses, the re-prefill path takes over, and the
+    output is still token-identical."""
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(5, t)
+    cluster = ServeCluster(m, model, params, slots=16, max_len=64,
+                           prefill_chunk=CHUNK, prefix_cache=False)
+    for r in _requests(cfg, 8, max_new=8, seed=3):
+        cluster.submit(r)
+    by_owner = {}
+    for rec in cluster.sessions.values():
+        by_owner.setdefault(rec.owner, []).append(rec)
+    victim = max(by_owner, key=lambda o: len(by_owner[o]))
+    for rec in by_owner[victim]:
+        for j in range(rec.exported_chunks):
+            cluster.blocks.remove(cluster._block_name(rec.session_id, j))
+    m.fail(victim)
+    assert cluster.handoff_misses >= 1
+    cluster.run()
+    for rec in cluster.sessions.values():
+        want = _reference_tokens(model, params, rec.prompt, 8, 64)
+        assert rec.generated == want, f"{rec.session_id} diverged"
+
+
+@pytest.mark.slow
+def test_completed_sessions_reclaim_their_blocks(smoke_model):
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(4, t)
+    cluster = ServeCluster(m, model, params, slots=8, max_len=64,
+                           prefill_chunk=CHUNK, prefix_cache=False)
+    for r in _requests(cfg, 4, max_new=4, seed=5):
+        cluster.submit(r)
+    cluster.run()
+    for rec in cluster.sessions.values():
+        assert rec.exported_chunks == 0
+        assert not cluster.blocks.contains(
+            cluster._block_name(rec.session_id, 0))
+
+
+def test_kv_blocks_opt_out_and_guard(smoke_model):
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(4, t)
+    off = ServeCluster(m, model, params, slots=4, max_len=64,
+                       prefill_chunk=CHUNK, kv_blocks=False)
+    assert off.blocks is None and off.prefix is None
+    with pytest.raises(ValueError):
+        ServeCluster(m, model, params, slots=4, max_len=64,
+                     prefill_chunk=None, kv_blocks=True)
+
+
+# ---------------------------------------------------------------------------
+# cross-session prefix cache
+# ---------------------------------------------------------------------------
+
+def test_prefix_hit_skips_prefill_chunks(smoke_model):
+    """Second session sharing a 20-token prompt imports the two full
+    chunks instead of computing them: one segment call instead of three,
+    same tokens."""
+    cfg, model, params = smoke_model
+    pc = PrefixCache(_prefix_store(), chunk=CHUNK, salt=cfg.name)
+    rep = Replica(model, slots=4, max_len=48, prefill_chunk=CHUNK,
+                  prefix_cache=pc)
+    rep.attach_params(params)
+    calls = [0]
+    inner = rep._prefill_chunk
+
+    def counting(params_, seg, one, off):
+        calls[0] += 1
+        return inner(params_, seg, one, off)
+
+    rep._prefill_chunk = counting
+    rng = np.random.default_rng(31)
+    prompt = rng.integers(0, cfg.vocab, 20, dtype=np.int32)
+    tok1 = rep.admit(Request("p1", prompt, max_new_tokens=5))
+    assert calls[0] == 3                   # padded 24 / chunk 8
+    calls[0] = 0
+    tok2 = rep.admit(Request("p2", prompt, max_new_tokens=5))
+    assert calls[0] == 1                   # only the final segment ran
+    assert tok2 == tok1
+    assert pc.hits == 2 and pc.tokens_saved == 16
+    want = _reference_tokens(model, params, prompt, 5, 48)
+    streams = {"p1": [tok1], "p2": [tok2]}
+    for _ in range(4):
+        for sid, tok in rep.decode_round().items():
+            streams[sid].append(tok)
+    assert streams["p1"] == want and streams["p2"] == want
+
+
+@pytest.mark.slow
+def test_cluster_prefix_cache_shares_system_prompt(smoke_model):
+    """Cluster-wide: sessions landing on DIFFERENT owners still share
+    the prefix KV through the replicated store."""
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(5, t)
+    cluster = ServeCluster(m, model, params, slots=8, max_len=64,
+                           prefill_chunk=CHUNK)
+    rng = np.random.default_rng(41)
+    system = rng.integers(0, cfg.vocab, 16, dtype=np.int32)
+    prompts = {}
+    for i in range(6):
+        tail = rng.integers(0, cfg.vocab, 3 + i, dtype=np.int32)
+        prompts[f"sys{i}"] = np.concatenate([system, tail])
+    for sid, p in prompts.items():
+        cluster.submit(Request(sid, p, max_new_tokens=4))
+    assert len({rec.owner for rec in cluster.sessions.values()}) > 1
+    assert cluster.prefix.hits > 0
+    assert cluster.prefix.tokens_saved >= CHUNK
+    cluster.run()
+    for sid, p in prompts.items():
+        want = _reference_tokens(model, params, p, 4, 64)
+        assert cluster.sessions[sid].generated == want, f"{sid} diverged"
+    assert cluster.stats()["prefix_hits"] == cluster.prefix.hits
