@@ -291,6 +291,32 @@ def bench_prefix_cache(cfg, model, params, *, max_len, chunk=16,
             "saved_prefill_flops": int(saved_flops)}
 
 
+def bench_prefix_affinity(cfg, model, params, *, sessions=8) -> dict:
+    """Prefix-cache-aware admission on a 2-node cluster: sessions
+    sharing a system prompt should land on the replica that already
+    holds its prefix chunks whenever the replica_set gives submit a
+    choice — the affinity-hit count is the placement wins."""
+    from repro.runtime import Membership
+    from repro.serve import Request, ServeCluster
+
+    m = Membership(t_q=60.0, now=lambda: 0.0)
+    for i in range(2):
+        m.request_join(f"10.9.0.{i}", 7000 + i)
+    cluster = ServeCluster(m, model, params, slots=max(sessions, 8),
+                           max_len=64, replication=2)
+    rng = np.random.default_rng(41)
+    system = rng.integers(0, cfg.vocab, 20, dtype=np.int32)
+    for i in range(sessions):
+        cluster.submit(Request(f"af{i}", system.copy(), max_new_tokens=2))
+    hits = cluster.prefix_affinity_hits
+    owners = {rec.owner for rec in cluster.sessions.values()}
+    emit("serve_prefix_affinity", 0.0,
+         f"{hits}/{sessions - 1} steerable admits kept warm "
+         f"({len(owners)} owner(s))")
+    return {"sessions": sessions, "prefix_affinity_hits": hits,
+            "distinct_owners": len(owners)}
+
+
 def run(full: bool = False, out: str = "BENCH_serve.json") -> dict:
     ensure_tuned()
     cfg, model, params = _setup()
@@ -307,8 +333,19 @@ def run(full: bool = False, out: str = "BENCH_serve.json") -> dict:
     }
     prefix = bench_prefix_cache(cfg, model, params, max_len=64,
                                 sessions=10 if full else 8)
+    prefix.update(bench_prefix_affinity(cfg, model, params,
+                                        sessions=10 if full else 8))
     concurrent = bench_concurrent_prefill(cfg, model, params, slots=slots,
                                           max_len=64, active=4, reps=reps)
+    try:
+        from .bench_tp import collect as collect_tp
+    except ImportError:
+        from bench_tp import collect as collect_tp
+    tp = collect_tp(full=full)          # 8-host-device subprocess sweep
+    for r in tp["sweep"]:
+        emit(f"serve_tp{r['tp']}_decode", r["round_us"],
+             f"kv/dev={r['per_device_kv_bytes']}B "
+             f"coll/round={r['collective_bytes_per_round']}B")
     prov = provenance()
     payload = {"benchmark": "serve", "model": cfg.name,
                "mode": prov["mode"], "provenance": prov,
@@ -316,7 +353,8 @@ def run(full: bool = False, out: str = "BENCH_serve.json") -> dict:
                "migration": variants["handoff"],   # the default serve path
                "migration_variants": variants,
                "prefix_cache": prefix,
-               "concurrent_prefill": concurrent}
+               "concurrent_prefill": concurrent,
+               "tp": tp}
     with open(out, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {out}")

@@ -232,9 +232,35 @@ def kernel_rooflines(full: bool = False, reps: int = 5) -> List[Dict]:
     return rows
 
 
+SERVE_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_serve.json")
+
+
+def tp_decode_rows(path: str = SERVE_JSON) -> List[Dict]:
+    """Collective-term rows for the TP decode sweep in BENCH_serve.json:
+    psum bytes per decode round against the ICI budget, next to the
+    1/TP per-device KV footprint.  On host-CPU runs the wall clock is
+    emulation noise, but the BYTES are the compiled program's — the
+    collective term is what a real multi-chip deployment would pay."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        payload = json.load(f)
+    rows = []
+    for r in payload.get("tp", {}).get("sweep", []):
+        coll_s = r["collective_bytes_per_round"] / (LINKS * LINK_BW)
+        rows.append({**r, "collective_term_s": coll_s})
+        emit(f"roofline/tp_decode/tp{r['tp']}", r["round_us"],
+             f"coll/round={r['collective_bytes_per_round']}B "
+             f"coll_term={coll_s * 1e9:.1f}ns "
+             f"kv/dev={r['per_device_kv_bytes']}B")
+    return rows
+
+
 def run(full: bool = False) -> None:
     for _ in kernel_rooflines(full):
         pass
+    tp_decode_rows()
     recs = load()
     if not recs:
         emit("roofline/missing", 0.0, "run repro.launch.dryrun --all first")

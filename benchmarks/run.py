@@ -13,8 +13,9 @@ from __future__ import annotations
 import argparse
 
 from . import (bench_latency, bench_maintenance, bench_ring_lookup,
-               bench_serve, fig3_planetlab_bw, fig4_hpc_bw, fig5_latency,
-               fig7_analytical, fig8_quarantine, roofline, table_validation)
+               bench_serve, bench_tp, fig3_planetlab_bw, fig4_hpc_bw,
+               fig5_latency, fig7_analytical, fig8_quarantine, roofline,
+               table_validation)
 from .common import header
 
 ALL = {
@@ -27,6 +28,7 @@ ALL = {
     "roofline": roofline.run,
     "ring_lookup": bench_ring_lookup.run,
     "serve": bench_serve.run,
+    "tp": bench_tp.run,
     "maintenance": bench_maintenance.run,
     "latency": bench_latency.run,
 }

@@ -430,6 +430,14 @@ class PrefixCache:
         whole chunks only, and never the final segment."""
         return max(((length - 1) // self.chunk) * self.chunk, 0)
 
+    def chunk_name(self, tokens: np.ndarray, end: int) -> Optional[str]:
+        """Public content-address of the chunk ending at ``end`` — what
+        admission affinity keys warm-replica lookups on (None when the
+        prompt has no importable chunk there)."""
+        if end < self.chunk or end > self.max_cover(len(tokens)):
+            return None
+        return self._name(np.asarray(tokens, np.int32), end)
+
     def match(self, tokens: np.ndarray) -> Tuple[int, List[np.ndarray]]:
         """Longest contiguous run of cached prefix chunks: returns
         (covered token count, the chunk blocks to import)."""

@@ -7,28 +7,69 @@ any jax import; everything else sees the real device count.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import List, Optional, Sequence, Union
 
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _auto_kw(n: int) -> dict:
+    """axis_types=Auto on jax versions that have it, {} otherwise (jax
+    0.4.x meshes are implicitly auto — passing the kwarg would crash)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {} if at is None else {"axis_types": (at.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_auto_kw(len(axes)))
 
 
 def make_host_mesh(model_axis: int = 1) -> Mesh:
-    """Mesh over whatever devices exist (CPU tests: usually (1,1))."""
+    """Mesh over whatever devices exist (CPU tests: usually (1,1)).
+
+    ``model_axis`` must divide the device count exactly: the old path
+    floored ``data`` to 1 and let ``jax.make_mesh`` fail later with an
+    opaque device-count mismatch (or silently built a mesh smaller than
+    the host when the floor happened to fit)."""
     n = len(jax.devices())
-    data = max(1, n // model_axis)
-    return jax.make_mesh((data, model_axis), ("data", "model"),
-                         axis_types=_auto(2))
+    if model_axis < 1 or n % model_axis:
+        raise ValueError(
+            f"model_axis={model_axis} must be >= 1 and divide the "
+            f"{n} available device(s) exactly; pick a divisor of {n} "
+            f"(or re-launch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=<multiple of "
+            f"{model_axis}>)")
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
+                         **_auto_kw(2))
+
+
+def replica_groups(mesh: Union[Mesh, Sequence, None], tp: int,
+                   *, axis: str = "model") -> List[Mesh]:
+    """Carve a device pool into per-replica tensor-parallel sub-meshes.
+
+    Each group is a 1-D Mesh of ``tp`` consecutive devices over a single
+    ``axis`` ("model") — the unit a ring node maps to in the serve plane
+    (node = replica group, not device).  ``mesh`` may be a Mesh (its
+    devices are taken in row-major order, so a group's devices are
+    ICI-adjacent along the fastest-varying axis), an explicit device
+    sequence, or None for every host device."""
+    if mesh is None:
+        devices = list(jax.devices())
+    elif isinstance(mesh, Mesh):
+        devices = list(mesh.devices.reshape(-1))
+    else:
+        devices = list(mesh)
+    n = len(devices)
+    if tp < 1 or n % tp:
+        raise ValueError(
+            f"tp={tp} must be >= 1 and divide the {n} pooled device(s) "
+            f"exactly — a partial group cannot hold a full weight shard "
+            f"set")
+    return [Mesh(np.array(devices[i:i + tp]), (axis,), **_auto_kw(1))
+            for i in range(0, n, tp)]
 
 
 HARDWARE = {

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.sharding.specs import shard
+from repro.sharding.specs import psum_tp, shard, tp_axis, tp_index
 
 Params = Dict[str, Any]
 
@@ -315,7 +315,9 @@ def attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
     else:
         out = flash_attention(q, k, v, causal=causal, impl=impl)
     out = out.reshape(b, s, h * hd)
-    out = out @ params["wo"]
+    # row-parallel combine: under TP each device holds h/tp heads and the
+    # matching wo rows, so the projection is a partial sum over heads
+    out = psum_tp(out @ params["wo"])
     return shard(out, "batch", "seq", "act_embed"), new_cache
 
 
@@ -422,7 +424,7 @@ def mla_attention(params: Params, x: jax.Array, cfg: ModelConfig, *,
         k = shard(k, "batch", "kv_seq", "heads", None)
         v = shard(v, "batch", "kv_seq", "heads", None)
         out = flash_attention(qf, k, v, causal=True, impl=impl)
-    out = out.reshape(b, s, h * v_hd) @ params["wo"]
+    out = psum_tp(out.reshape(b, s, h * v_hd) @ params["wo"])
     return shard(out, "batch", "seq", "act_embed"), new_cache
 
 
@@ -459,7 +461,7 @@ def mlp(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     if "w3" in params:
         h = h * (x @ params["w3"])
     h = shard(h, "batch", "seq", "ff")
-    out = h @ params["w2"]
+    out = psum_tp(h @ params["w2"])          # row-parallel over the ff shard
     return shard(out, "batch", "seq", "act_embed")
 
 
@@ -599,6 +601,11 @@ def moe_block(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         if "sw3" in params:
             hs = hs * (x @ params["sw3"])
         out = out + hs @ params["sw2"]
+    # Under TP the expert (and shared-expert) ff dim is sharded while the
+    # replicated router picks identical slots on every device, so routed
+    # output, gate scaling, scatter-add combine and shared experts are all
+    # linear in per-device partial sums: ONE psum at the end suffices.
+    out = psum_tp(out)
     return shard(out, "batch", "seq", "act_embed")
 
 
@@ -621,7 +628,18 @@ def embed_specs(cfg: ModelConfig) -> Dict[str, Tuple[Optional[str], ...]]:
 
 
 def embed(params: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
-    out = jnp.take(params["embedding"], tokens, axis=0).astype(dt(cfg))
+    table = params["embedding"]
+    if tp_axis() is not None and table.shape[0] != cfg.vocab:
+        # vocab-sharded table (EmbeddingShard idiom): each device looks up
+        # the tokens that fall in its row range, zeros the rest, and one
+        # psum assembles the full embedding on every device.
+        vloc = table.shape[0]
+        loc = tokens - tp_index() * vloc
+        ok = (loc >= 0) & (loc < vloc)
+        out = jnp.take(table, jnp.clip(loc, 0, vloc - 1), axis=0)
+        out = psum_tp(jnp.where(ok[..., None], out, 0).astype(dt(cfg)))
+    else:
+        out = jnp.take(table, tokens, axis=0).astype(dt(cfg))
     return shard(out, "batch", "seq", "act_embed")
 
 

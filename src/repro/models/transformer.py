@@ -204,7 +204,30 @@ def export_kv_block(cfg: ModelConfig, cache: Dict, row: int, off: int,
     return np.stack([k.transpose(1, 0, 2, 3), v.transpose(1, 0, 2, 3)])
 
 
-def cache_with_blocks(cfg: ModelConfig, max_len: int, blocks) -> Dict:
+def export_kv_block_shards(cfg: ModelConfig, cache: Dict, row: int, off: int,
+                           chunk: int, shards: int):
+    """Per-shard slabs for one chunk: shard ``s`` carries kv_heads
+    [s*H/shards, (s+1)*H/shards) in the same (2, chunk, layers, heads,
+    head_dim) wire format.  Under a TP group each head range lives on
+    exactly one device, so every slice pulls only that device's bytes —
+    ``np.concatenate(slabs, axis=3)`` reassembles the full slab."""
+    import numpy as np
+    hkv = cfg.num_kv_heads
+    if shards < 1 or hkv % shards:
+        raise ValueError(f"shards={shards} must divide kv_heads={hkv}")
+    hl = hkv // shards
+    out = []
+    for s_i in range(shards):
+        lo = s_i * hl
+        k = np.asarray(cache["k"][:, row, off:off + chunk, lo:lo + hl])
+        v = np.asarray(cache["v"][:, row, off:off + chunk, lo:lo + hl])
+        out.append(np.stack([k.transpose(1, 0, 2, 3),
+                             v.transpose(1, 0, 2, 3)]))
+    return out
+
+
+def cache_with_blocks(cfg: ModelConfig, max_len: int, blocks,
+                      shardings: Optional[Dict[str, Any]] = None) -> Dict:
     """Fresh single-row cache with a contiguous run of exported slabs
     already written at positions [0, len(blocks)*chunk).
 
@@ -212,7 +235,10 @@ def cache_with_blocks(cfg: ModelConfig, max_len: int, blocks) -> Dict:
     per-block ``.at[].set`` costs a dispatched XLA op (and a first-call
     compile) per block, which at serve-plane block sizes is as slow as
     just recomputing the chunk — this path is O(1) dispatches however
-    long the imported run is."""
+    long the imported run is.  ``shardings`` ({"k": NamedSharding, "v":
+    ...}) lands each k/v directly under a TP group's layout: device_put
+    splits the host slab so every device receives only its kv_heads
+    slice."""
     import numpy as np
     shapes = cache_shapes(cfg, 1, max_len)
     k = np.zeros(shapes["k"].shape, shapes["k"].dtype)
@@ -223,6 +249,9 @@ def cache_with_blocks(cfg: ModelConfig, max_len: int, blocks) -> Dict:
         covered = kk.shape[0]
         k[:, 0, :covered] = kk.transpose(1, 0, 2, 3)
         v[:, 0, :covered] = vv.transpose(1, 0, 2, 3)
+    if shardings is not None:
+        return {"k": jax.device_put(k, shardings["k"]),
+                "v": jax.device_put(v, shardings["v"])}
     return {"k": jnp.asarray(k), "v": jnp.asarray(v)}
 
 

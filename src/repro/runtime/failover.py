@@ -84,6 +84,10 @@ class ReplicaSupervisor:
     def __init__(self, membership: Membership):
         self.generation = 0
         self._required: Dict[int, int] = {}
+        self.membership = membership
+        # node id -> device ids of its replica group (TP serving: one
+        # ring node spans a device sub-mesh; see models.tp)
+        self._groups: Dict[int, tuple] = {}
         membership.subscribe(self._on_event)
 
     def _on_event(self, ev) -> None:
@@ -99,3 +103,34 @@ class ReplicaSupervisor:
         """True iff the node suffered an event since ``stamp`` that
         invalidates device state created under it."""
         return stamp < self._required.get(node_id, 0)
+
+    # -- replica groups (tensor-parallel serving) ---------------------------
+    def register_group(self, node_id: int, device_ids) -> None:
+        """Bind a ring node to the devices of its TP replica group."""
+        self._groups[node_id] = tuple(device_ids)
+
+    def release_group(self, node_id: int) -> None:
+        self._groups.pop(node_id, None)
+
+    def group_owner(self, device_id: int) -> Optional[int]:
+        """Ring node whose replica group holds ``device_id`` (None if the
+        device backs no registered group)."""
+        for node, devs in self._groups.items():
+            if device_id in devs:
+                return node
+        return None
+
+    def device_lost(self, device_id: int) -> Optional[int]:
+        """Partial-group loss policy: losing ANY device of a group loses
+        the whole replica — weight shards and KV slices are useless
+        without their siblings.  Fails the owning node on the ring
+        (generation bump + required-generation pin ride the membership
+        event), which triggers the serve cluster's normal migration of
+        its sessions to healthy groups.  Returns the failed node id."""
+        node = self.group_owner(device_id)
+        if node is None:
+            return None
+        self._groups.pop(node, None)
+        if node in set(self.membership.members()):
+            self.membership.fail(node)
+        return node

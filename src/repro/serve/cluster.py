@@ -30,7 +30,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set
+from typing import Any, Dict, List, Optional, Set
 
 import numpy as np
 
@@ -124,7 +124,8 @@ class ServeCluster:
                  fused: Optional[bool] = None,
                  kv_blocks: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
-                 block_store: Optional[BlockStore] = None):
+                 block_store: Optional[BlockStore] = None,
+                 tp: int = 1, mesh=None):
         self.membership = membership
         self.state = membership.ring_state
         self.model = model if decode_kernel is None else \
@@ -149,6 +150,33 @@ class ServeCluster:
         self.fused = fused
         self.router = SessionRouter(membership)
         self.supervisor = ReplicaSupervisor(membership)
+        # tensor-parallel replica groups: with tp > 1 a ring node maps to
+        # a device sub-mesh (models.tp.TPReplicaGroup), not a device.
+        # The pooled ``mesh`` (a Mesh, a device sequence, or None for
+        # every host device) is carved into len(devices)/tp groups; a
+        # node acquires a group when its replica is created and releases
+        # it when the replica dies.  Groups outnumbered by ring nodes are
+        # shared deterministically (host-device test topologies).
+        self.tp = int(tp)
+        self._group_meshes: List[Any] = []
+        self._group_objs: Dict[int, Any] = {}     # gi -> TPReplicaGroup
+        self._group_params: Dict[int, Any] = {}   # gi -> sharded params
+        self._node_group: Dict[int, int] = {}
+        self._free_groups: List[int] = []
+        self._dead_groups: Set[int] = set()
+        if self.tp > 1:
+            from repro.launch.mesh import replica_groups
+            from repro.models.tp import validate_tp
+            validate_tp(self.model.cfg, self.tp)
+            self._group_meshes = replica_groups(mesh, self.tp)
+            self._free_groups = list(
+                range(len(self._group_meshes) - 1, -1, -1))
+        # prefix-cache-aware admission: node -> content-addresses of the
+        # prefix chunks that node has computed or imported (warm = no
+        # fetch needed in a real placement); ``submit`` prefers a warm
+        # replica_set candidate when several have capacity
+        self._warm_prefixes: Dict[int, Set[str]] = {}
+        self.prefix_affinity_hits = 0
         self.replicas: Dict[int, Replica] = {}
         self.sessions: Dict[str, SessionRecord] = {}
         self.traces: Dict[str, RequestTrace] = {}
@@ -203,23 +231,113 @@ class ServeCluster:
         if rep is not None and self.supervisor.needs_restart(node,
                                                             rep.generation):
             del self.replicas[node]
+            self._forget_node(node)
             return None
         return rep
 
     def _replica_for(self, node: int) -> Replica:
         rep = self._live_replica(node)
         if rep is None:
+            group, params = None, self.params
+            if self.tp > 1:
+                gi = self._acquire_group(node)
+                group = self._group_obj(gi)
+                params = self._params_for(gi)
             rep = Replica(self.model, slots=self.slots, max_len=self.max_len,
                           generation=self.supervisor.stamp(),
                           prefill_chunk=self.prefill_chunk,
-                          prefix_cache=self.prefix)
-            rep.attach_params(self.params)
+                          prefix_cache=self.prefix, group=group)
+            rep.attach_params(params)
             self.replicas[node] = rep
+            if group is not None:
+                self.supervisor.register_group(node, group.device_ids())
         return rep
 
     def _has_capacity(self, node: int) -> bool:
         rep = self._live_replica(node)
-        return self.slots > 0 if rep is None else rep.num_free > 0
+        if rep is not None:
+            return rep.num_free > 0
+        if self.slots <= 0:
+            return False
+        # a fresh replica additionally needs a live device group
+        return self.tp == 1 or \
+            len(self._dead_groups) < len(self._group_meshes)
+
+    # -- device-group pool (tp > 1) -----------------------------------------
+    def _group_obj(self, gi: int):
+        g = self._group_objs.get(gi)
+        if g is None:
+            from repro.models.tp import TPReplicaGroup
+            g = TPReplicaGroup(self.model, self._group_meshes[gi])
+            self._group_objs[gi] = g
+        return g
+
+    def _params_for(self, gi: int):
+        p = self._group_params.get(gi)
+        if p is None:
+            p = self._group_obj(gi).shard_params(self.params)
+            self._group_params[gi] = p
+        return p
+
+    def _acquire_group(self, node: int) -> int:
+        gi = self._node_group.get(node)
+        if gi is not None and gi not in self._dead_groups:
+            return gi
+        while self._free_groups and \
+                self._free_groups[-1] in self._dead_groups:
+            self._free_groups.pop()
+        if self._free_groups:
+            gi = self._free_groups.pop()
+        else:
+            live = [i for i in range(len(self._group_meshes))
+                    if i not in self._dead_groups]
+            if not live:
+                raise RuntimeError("no live device group for a new replica")
+            gi = live[node % len(live)]    # oversubscribed: share a group
+        self._node_group[node] = gi
+        return gi
+
+    def _release_group(self, node: int) -> None:
+        gi = self._node_group.pop(node, None)
+        if gi is None or gi in self._dead_groups:
+            return
+        if gi not in self._node_group.values() \
+                and gi not in self._free_groups:
+            self._free_groups.append(gi)
+
+    def _forget_node(self, node: int) -> None:
+        """A node's replica is gone: return its device group to the pool
+        (unless the group died) and drop its warm-prefix residency."""
+        self.supervisor.release_group(node)
+        self._release_group(node)
+        self._warm_prefixes.pop(node, None)
+
+    def lose_device(self, device_id: int) -> Optional[int]:
+        """Partial-group loss: any device of a replica group failing
+        loses the whole replica (its weight shards and KV slices are
+        useless without their siblings).  The owning group is marked
+        dead FIRST — the membership-event cascade releases groups back
+        to the pool synchronously, and a dead group must never host a
+        fresh replica — then the owning ring node ``fail()``s, driving
+        the normal generation-bump -> migration path onto healthy
+        groups.  Returns the failed node id (None if the device backs no
+        group)."""
+        node = self.supervisor.group_owner(device_id)
+        if node is None:
+            return None
+        gi = self._node_group.get(node)
+        if gi is not None:
+            self._dead_groups.add(gi)
+        failed = self.supervisor.device_lost(device_id)
+        if gi is not None:
+            # oversubscribed topologies: every other node sharing the
+            # dead group lost its devices too
+            members = set(self.membership.members())
+            for other, g in list(self._node_group.items()):
+                if g == gi and other != failed and other in members:
+                    self.supervisor.release_group(other)
+                    self.membership.fail(other)
+        return failed
 
     def _session_resident(self, rec: "SessionRecord") -> bool:
         """Does the session's slot actually exist on its recorded owner?
@@ -251,16 +369,27 @@ class ServeCluster:
         group = [int(p) for p in self.state.replica_set(key,
                                                         self.replication)]
         t_route = time.perf_counter_ns()
-        owner = next((n for n in group if self._has_capacity(n)), None)
+        cands = [n for n in group if self._has_capacity(n)]
+        owner = cands[0] if cands else None
         if owner is None:
             raise RuntimeError(
                 f"no capacity in the {len(group)}-way replica set for "
                 f"session {req.session_id}")
+        if len(cands) > 1:
+            # prefix-cache-aware admission: among capacity-holding
+            # replica_set candidates, prefer one that already computed or
+            # imported this prompt's first prefix chunk (warm = the
+            # prefix KV needs no fetch in a real placement)
+            warm = self._warm_candidate(req.prompt, cands)
+            if warm is not None:
+                owner = warm
+                self.prefix_affinity_hits += 1
         rec = SessionRecord(req.session_id, key, np.asarray(req.prompt,
                                                             np.int32),
                             req.max_new_tokens, owner=owner)
         t_queue = time.perf_counter_ns()
         tok = self._replica_for(owner).admit(req)
+        self._note_warm(owner, rec.prompt)
         t_admit = time.perf_counter_ns()
         self.traces[req.session_id] = RequestTrace(
             submitted_ns=t_sub,
@@ -272,10 +401,40 @@ class ServeCluster:
         self._push_token(rec, tok)
         return tok
 
+    # -- prefix-affinity bookkeeping ------------------------------------------
+    def _warm_candidate(self, prompt, cands: List[int]) -> Optional[int]:
+        if self.prefix is None:
+            return None
+        name = self.prefix.chunk_name(np.asarray(prompt, np.int32),
+                                      self.prefix.chunk)
+        if name is None:
+            return None
+        return next((n for n in cands
+                     if name in self._warm_prefixes.get(n, ())), None)
+
+    def _note_warm(self, node: int, prompt) -> None:
+        """Record that ``node`` now holds every full prefix chunk of this
+        prompt (it just computed or imported them)."""
+        if self.prefix is None:
+            return
+        prompt = np.asarray(prompt, np.int32)
+        c = self.prefix.chunk
+        names = set()
+        for end in range(c, self.prefix.max_cover(len(prompt)) + 1, c):
+            nm = self.prefix.chunk_name(prompt, end)
+            if nm is not None:
+                names.add(nm)
+        if names:
+            self._warm_prefixes.setdefault(node, set()).update(names)
+
     # -- KV data plane (DESIGN.md §11) ----------------------------------------
     @staticmethod
-    def _block_name(session_id: str, j: int) -> str:
-        return f"kv/{session_id}/{j}"
+    def _block_name(session_id: str, j: int, shard: int = 0) -> str:
+        """Store name of chunk ``j``: shard 0 keeps the legacy name (a
+        tp=1 store is byte-identical to before), shard s > 0 of a TP
+        group's per-device export lands under a ``#s`` suffix."""
+        base = f"kv/{session_id}/{j}"
+        return base if shard == 0 else f"{base}#{shard}"
 
     def _export_session(self, rec: SessionRecord) -> None:
         """Ship every newly completed KV chunk of the session's live
@@ -293,8 +452,12 @@ class ServeCluster:
         c = self.prefill_chunk
         full = int(rep.lengths[slot]) // c
         for j in range(rec.exported_chunks, full):
-            self.blocks.put(self._block_name(rec.session_id, j),
-                            pack_array(rep.export_block(rec.session_id, j)))
+            # per-shard export: each device of a TP group ships only its
+            # kv_heads slice (one slab for single-device replicas)
+            for s_i, slab in enumerate(
+                    rep.export_block_shards(rec.session_id, j)):
+                self.blocks.put(self._block_name(rec.session_id, j, s_i),
+                                pack_array(slab))
             self.exported_blocks += 1
         rec.exported_chunks = max(rec.exported_chunks, full)
 
@@ -304,20 +467,42 @@ class ServeCluster:
         all-position logits carry the admit token)."""
         c = self.prefill_chunk
         cap = max(((s - 1) // c) * c, 0)
+        hkv = self.model.cfg.num_kv_heads
         blocks: List[np.ndarray] = []
         while (len(blocks) + 1) * c <= cap:
             data = self.blocks.get(self._block_name(rec.session_id,
                                                     len(blocks)))
             if data is None:
                 break
-            blocks.append(unpack_array(data))
+            slab0 = unpack_array(data)
+            # shard 0's local head count names the donor's shard fan-out
+            # (self-describing: a tp=4 donor's chunks reassemble on a
+            # tp=2 — or tp=1 — consumer and vice versa); ANY missing
+            # sibling shard makes the whole chunk a miss, so a torn
+            # export degrades to recompute, never to wrong KV
+            if slab0.shape[3] == 0 or hkv % slab0.shape[3]:
+                break
+            n_shards = hkv // slab0.shape[3]
+            shards = [slab0]
+            for s_i in range(1, n_shards):
+                d2 = self.blocks.get(self._block_name(rec.session_id,
+                                                      len(blocks), s_i))
+                if d2 is None:
+                    shards = None
+                    break
+                shards.append(unpack_array(d2))
+            if shards is None:
+                break
+            blocks.append(shards[0] if len(shards) == 1
+                          else np.concatenate(shards, axis=3))
         return blocks
 
     def _drop_session_blocks(self, rec: SessionRecord) -> None:
         if self.blocks is None:
             return
         for j in range(rec.exported_chunks):
-            self.blocks.remove(self._block_name(rec.session_id, j))
+            for s_i in range(max(self.tp, 1)):
+                self.blocks.remove(self._block_name(rec.session_id, j, s_i))
         rec.exported_chunks = 0
 
     def _push_token(self, rec: SessionRecord, tok: int) -> None:
@@ -499,7 +684,8 @@ class ServeCluster:
             # leave: the node's slab is gone with it; quarantine: the
             # supervisor pinned its generation, so the slab could never
             # be resumed anyway — reclaim it instead of hoarding KV
-            self.replicas.pop(ev.subject_id, None)
+            if self.replicas.pop(ev.subject_id, None) is not None:
+                self._forget_node(ev.subject_id)
             if self.blocks is not None and ev.kind == "leave":
                 # a detected failure takes the node's block copies with
                 # it (quarantine keeps them: the peer is alive, §V)
@@ -608,6 +794,7 @@ class ServeCluster:
         rec.owner = new_owner
         rec.migrations += 1
         self.migrated_sessions += 1
+        self._note_warm(new_owner, rec.prompt)
         self._push_token(rec, tok)
 
     def _handoff_from_blocks(self, rec: SessionRecord, rep: Replica,
@@ -653,6 +840,7 @@ class ServeCluster:
         rec.owner = new_owner
         rec.migrations += 1
         self.migrated_sessions += 1
+        self._note_warm(new_owner, rec.prompt)
         self._push_token(rec, tok)
         return True
 
@@ -701,6 +889,12 @@ class ServeCluster:
             "route_upload_bytes": self.state.upload_bytes,
             "route_delta_uploads": self.state.delta_uploads,
         }
+        if self.tp > 1:
+            out.update({
+                "tp": self.tp,
+                "groups": len(self._group_meshes),
+                "dead_groups": len(self._dead_groups),
+            })
         if self.blocks is not None:
             out.update({
                 "handoffs": self.handoffs,
@@ -715,5 +909,6 @@ class ServeCluster:
                 "prefix_hits": self.prefix.hits,
                 "prefix_misses": self.prefix.misses,
                 "prefix_tokens_saved": self.prefix.tokens_saved,
+                "prefix_affinity_hits": self.prefix_affinity_hits,
             })
         return out

@@ -197,11 +197,18 @@ class Replica:
 
     def __init__(self, model: Model, *, slots: int, max_len: int,
                  generation: int = 0, prefill_chunk: Optional[int] = None,
-                 prefix_cache=None):
+                 prefix_cache=None, group=None):
         self.model = model
         self.slots = slots
         self.max_len = max_len
         self.generation = generation     # membership generation at creation
+        # tensor-parallel replica group (models.tp.TPReplicaGroup) or
+        # None for a single-device replica.  With a group, the compiled
+        # programs come from the group (shard_map over its sub-mesh), the
+        # cache is kv_heads-sharded across its devices, and the fused
+        # route→decode variants are skipped (the ring lookup stays
+        # host-side for groups).
+        self.group = group
         # content-addressed cross-session prompt-prefix cache
         # (repro.dht.data.PrefixCache or None): chunked prefills consult
         # it before computing a chunk and insert what they computed
@@ -210,7 +217,7 @@ class Replica:
         # wall time the last admit_from_blocks spent importing blocks
         # (the cluster splits handoff-transfer from re-prefill with it)
         self.import_us = 0.0
-        self.cache = model.init_cache(slots, max_len)
+        self.cache = self._init_cache(slots, max_len)
         self.lengths = np.zeros((slots,), np.int32)
         self.tokens = np.zeros((slots, 1), np.int32)
         self.active = np.zeros((slots,), bool)
@@ -231,9 +238,30 @@ class Replica:
         self.routed_owners: Dict[str, int] = {}
         # sids whose overlapped prefill failed (slot already released)
         self.failed_prefills: List[str] = []
-        (self._prefill, self._decode_full, self._decode_slots,
-         self._decode_full_fused, self._decode_slots_fused,
-         self._prefill_chunk) = _jitted(model)
+        if group is not None:
+            (self._prefill, self._decode_full, self._decode_slots,
+             self._prefill_chunk) = group.fns()
+            self._decode_full_fused = self._decode_slots_fused = None
+        else:
+            (self._prefill, self._decode_full, self._decode_slots,
+             self._decode_full_fused, self._decode_slots_fused,
+             self._prefill_chunk) = _jitted(model)
+
+    # -- group-aware cache plumbing (identity for single-device replicas) --
+    def _init_cache(self, batch: int, max_len: int):
+        if self.group is not None:
+            return self.group.init_cache(batch, max_len)
+        return self.model.init_cache(batch, max_len)
+
+    def _cache_with_blocks(self, blocks):
+        if self.group is not None:
+            return self.group.cache_with_blocks(self.max_len, blocks)
+        return self.model.cache_with_blocks(self.max_len, blocks)
+
+    def _export_kv_block(self, cache, row: int, off: int, chunk: int):
+        if self.group is not None:
+            return self.group.export_kv_block(cache, row, off, chunk)
+        return self.model.export_kv_block(cache, row, off, chunk)
 
     @property
     def num_active(self) -> int:
@@ -270,7 +298,7 @@ class Replica:
         else:
             raise RuntimeError("replica full")
         try:
-            one = self.model.init_cache(1, self.max_len)
+            one = self._init_cache(1, self.max_len)
             if self._chunkable(s):
                 # fixed-shape chunk loop: every admit of every length
                 # reuses ONE compiled segment program (whole-prompt
@@ -323,7 +351,7 @@ class Replica:
                 # replace the caller's zero cache with one assembled
                 # host-side around the imported run (a dispatched set per
                 # block would cost as much as recomputing the chunk)
-                one = self.model.cache_with_blocks(self.max_len, blocks)
+                one = self._cache_with_blocks(blocks)
                 start = covered
         padded = (s + c - 1) // c * c
         buf = np.zeros(padded, np.int32)
@@ -334,7 +362,7 @@ class Replica:
             logits, one = self._prefill_chunk(self.params, seg, one, off)
             if self.prefix_cache is not None and off + c <= s:
                 self.prefix_cache.insert(
-                    prompt, off, self.model.export_kv_block(one, 0, off, c))
+                    prompt, off, self._export_kv_block(one, 0, off, c))
         # the prompt's last real token sits at column (s-1) - (padded-c)
         # of the final (right-padded) segment's all-position logits
         tok = int(jnp.argmax(logits[0, (s - 1) - (padded - c)]))
@@ -372,7 +400,7 @@ class Replica:
             raise RuntimeError("replica full")
         try:
             t0 = time.perf_counter_ns()
-            one = self.model.cache_with_blocks(self.max_len, blocks)
+            one = self._cache_with_blocks(blocks)
             jax.block_until_ready(jax.tree.leaves(one)[0])
             self.import_us = (time.perf_counter_ns() - t0) / 1e3
             tok, one = self._run_chunks(req.prompt, one, start=covered)
@@ -394,7 +422,19 @@ class Replica:
         session's length has crossed that boundary)."""
         slot = self.sessions[session_id]
         c = self.prefill_chunk
-        return self.model.export_kv_block(self.cache, slot, j * c, c)
+        return self._export_kv_block(self.cache, slot, j * c, c)
+
+    def export_block_shards(self, session_id: str, j: int) -> List[np.ndarray]:
+        """Chunk ``j`` as per-shard slabs — shard s is the kv_heads slice
+        device s of the replica group holds (a 1-element list for
+        single-device replicas), each independently storable so a group
+        export moves every device's slice without first gathering the
+        full slab onto one device."""
+        slot = self.sessions[session_id]
+        c = self.prefill_chunk
+        if self.group is not None:
+            return self.group.export_kv_shards(self.cache, slot, j * c, c)
+        return [self.model.export_kv_block(self.cache, slot, j * c, c)]
 
     def _commit_slot(self, session_id: str, slot: int, s: int,
                      tok: int) -> None:
@@ -441,11 +481,10 @@ class Replica:
             covered, blocks = self.prefix_cache.match(
                 np.asarray(req.prompt, np.int32))
             if covered:
-                st["cache"] = self.model.cache_with_blocks(self.max_len,
-                                                           blocks)
+                st["cache"] = self._cache_with_blocks(blocks)
                 st["off"] = covered
         if st["cache"] is None:
-            st["cache"] = self.model.init_cache(1, self.max_len)
+            st["cache"] = self._init_cache(1, self.max_len)
         self._pending[req.session_id] = st
         return None
 
@@ -519,6 +558,8 @@ class Replica:
         ownership accounting.  One device program per round either way.
         """
         self.routed_owners = {}
+        if self.group is not None:
+            route = None     # fused ring lookup stays host-side for groups
         if not self.sessions:
             return {}
         act_idx = np.nonzero(self.active)[0].astype(np.int32)

@@ -91,7 +91,10 @@ def update_rules(**kw: MeshAxes) -> None:
 
 
 def logical_spec(*axes: Optional[str]) -> P:
-    """PartitionSpec for a tensor whose dims carry the given logical axes."""
+    """PartitionSpec for a tensor whose dims carry the given logical axes.
+
+    Unknown logical axes raise: a typo in a spec tuple used to resolve
+    to "replicated" and silently de-shard the tensor on every mesh."""
     rules = _STATE.rules
     resolved = []
     used: set = set()
@@ -99,7 +102,10 @@ def logical_spec(*axes: Optional[str]) -> P:
     def resolve(a: Optional[str]) -> MeshAxes:
         if a is None:
             return None
-        v = rules.get(a)
+        if a not in rules:
+            raise KeyError(
+                f"unknown logical axis {a!r}; known axes: {sorted(rules)}")
+        v = rules[a]
         if v is None:
             return None
         vs = (v,) if isinstance(v, str) else tuple(v)
@@ -115,9 +121,11 @@ def logical_spec(*axes: Optional[str]) -> P:
 
 
 def shard(x, *axes: Optional[str]):
-    """with_sharding_constraint on logical axes; identity without a mesh."""
+    """with_sharding_constraint on logical axes; identity without a mesh
+    and inside a tensor-parallel shard_map body (where every array is
+    already a per-device shard — a GSPMD constraint would be ill-typed)."""
     mesh = _STATE.mesh
-    if mesh is None:
+    if mesh is None or tp_axis() is not None:
         return x
     spec = logical_spec(*axes)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
@@ -128,3 +136,55 @@ def named_sharding(*axes: Optional[str]) -> Optional[NamedSharding]:
     if mesh is None:
         return None
     return NamedSharding(mesh, logical_spec(*axes))
+
+
+# ---------------------------------------------------------------------------
+# Tensor-parallel execution context (models/tp.py)
+#
+# Model code is written against GLOBAL shapes with `shard()` constraints;
+# under tensor parallelism the same code runs INSIDE a shard_map body on
+# per-device shards (local heads / ff / vocab), where partial matmul
+# results must be combined with an explicit psum.  The TP context names
+# the mapped mesh axis at trace time; `psum_tp` is the reduction hook the
+# layer code calls after every row-parallel matmul (attention wo, mlp w2,
+# moe combine, vocab-sharded embed).  Outside the context both are
+# no-ops, so single-device execution is untouched.
+# ---------------------------------------------------------------------------
+
+class _TPState(threading.local):
+    def __init__(self) -> None:
+        self.axis: Optional[str] = None
+
+
+_TP = _TPState()
+
+
+def tp_axis() -> Optional[str]:
+    """Mapped TP mesh-axis name while tracing inside a TP shard_map body
+    (set by ``tp_context``), else None."""
+    return _TP.axis
+
+
+@contextlib.contextmanager
+def tp_context(axis: str):
+    prev = _TP.axis
+    _TP.axis = axis
+    try:
+        yield
+    finally:
+        _TP.axis = prev
+
+
+def psum_tp(x):
+    """All-reduce ``x`` over the TP axis inside a TP context; identity
+    outside one.  This is the row-parallel combine: each device holds a
+    partial sum over its shard of the contracted dimension."""
+    a = tp_axis()
+    return jax.lax.psum(x, a) if a is not None else x
+
+
+def tp_index() -> int:
+    """This device's position along the TP axis (traced value inside a
+    TP context; 0 outside one — the single-shard case)."""
+    a = tp_axis()
+    return jax.lax.axis_index(a) if a is not None else 0

@@ -34,6 +34,70 @@ def test_shard_noop_without_mesh():
     assert sh.shard(x, "batch", None) is x
 
 
+def test_unknown_logical_axis_raises():
+    """A typo in a spec tuple must fail loudly, not silently resolve to
+    'replicated' and de-shard the tensor on every mesh."""
+    sh.set_mesh(None)
+    sh._STATE.rules = dict(sh.DEFAULT_RULES)
+    with pytest.raises(KeyError, match="unknown logical axis"):
+        sh.logical_spec("batch", "headz")
+    with pytest.raises(KeyError, match="unknown logical axis"):
+        sh.logical_spec("vocabs")
+    assert sh.logical_spec("batch", None, "heads") is not None
+
+
+def test_shard_noop_inside_tp_context():
+    """Inside a TP shard_map body every array is already a per-device
+    shard; a GSPMD constraint there would be ill-typed."""
+    import jax
+    import jax.numpy as jnp
+    mesh = jax.make_mesh((1,), ("model",))
+    x = jnp.ones((4, 4))
+    try:
+        sh.set_mesh(mesh)
+        with sh.tp_context("model"):
+            assert sh.shard(x, "heads", None) is x
+    finally:
+        sh.set_mesh(None)
+
+
+RULES_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from jax.sharding import NamedSharding
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import specs as sh
+
+for multi_pod in (False, True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with sh.mesh_context(mesh):
+        for axis in sh.DEFAULT_RULES:
+            spec = sh.logical_spec(axis)
+            # every resolved mesh axis must exist on THIS mesh (and the
+            # sharding must construct — NamedSharding validates names)
+            for e in spec:
+                for a in ([e] if isinstance(e, str) else list(e or ())):
+                    assert a in mesh.axis_names, (multi_pod, axis, a)
+            NamedSharding(mesh, spec)
+        # absent mesh axes are filtered, present ones kept
+        batch = sh.logical_spec("batch")
+        assert batch[0] == (("pod", "data") if multi_pod else "data"), batch
+print("RULES_OK")
+"""
+
+
+@pytest.mark.slow
+def test_default_rules_resolve_on_production_meshes():
+    """Every DEFAULT_RULES logical axis resolves to a valid PartitionSpec
+    under both production meshes (single-pod 16x16 and multi-pod
+    2x16x16), with absent axes ('pod' on single-pod) filtered out."""
+    out = subprocess.run(
+        [sys.executable, "-c", RULES_SCRIPT],
+        capture_output=True, text=True, timeout=300,
+        env={**__import__("os").environ, "PYTHONPATH": "src"})
+    assert "RULES_OK" in out.stdout, out.stderr[-2000:]
+
+
 COLLECTIVE_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
