@@ -1,0 +1,190 @@
+"""Placement-policy tradeoff bench (DESIGN.md §13): request latency vs
+maintenance traffic, ``RingSuccessor`` vs ``LatencyAware``.
+
+Simulates the serve plane's request/churn loop at the RingState level —
+no model, no DES event queue: sessions are admitted from random origin
+nodes, the policy picks the serving member of each session's replica
+set, and per-request round-trips are sampled from ``GeoDelay`` around
+the SAME per-region-pair medians the policy ranks by.  Churn batches
+(event rate 2n/S_avg from the shared ``ChurnConfig``, the §VII
+methodology) drive ``owner_diff``-based re-ranking of affected sessions
+and ``BlockStore.sync`` repair — the maintenance-bytes axis.
+
+Both policies in a cell consume the IDENTICAL event/request stream (one
+numpy RNG, policy code never touches it), so every delta in the output
+is the policy's doing.  Two environments:
+
+  * ``lan`` — ``Topology.single_region()`` (§VII-C/D, 0.14 ms RTT):
+    LatencyAware degenerates to ring order; the null test.
+  * ``wan`` — ``Topology.multi_dc(4)`` (§VII-B PlanetLab regime,
+    ~18-95 ms one-way between DCs): the headline cell.  CI gates that at
+    n=10^4 LatencyAware's p99 strictly dominates RingSuccessor's while
+    the maintenance-bytes ratio stays within the committed band (gates
+    compare ratios across policies in ONE run, never absolute ms across
+    runners).
+
+Emits BENCH_placement.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import random
+from typing import List, Optional
+
+import numpy as np
+
+try:
+    from .common import emit, header
+except ImportError:                                    # pragma: no cover
+    from common import emit, header
+
+from repro.core.churn import ChurnConfig
+from repro.core.edra import Event
+from repro.core.ringstate import RingState
+from repro.dht.data import BlockStore
+from repro.dht.des import GeoDelay
+from repro.runtime.placement import (LatencyAware, PlacementPolicy,
+                                     RingSuccessor, Topology)
+
+R = 2                        # replica-set width (ServeCluster default)
+SESSIONS = 512               # tracked sessions per cell
+BLOCK_BYTES = 1 << 14        # one 16 KiB KV slab per session, placed at
+KV_MIGRATION_BYTES = 1 << 14  # ... its key; moving a session costs the same
+
+
+def _rand_ids(rng: np.random.Generator, k: int) -> np.ndarray:
+    x = rng.integers(0, 2**64, size=2 * k + 16, dtype=np.uint64)
+    x = np.unique(x)[:k]
+    assert x.size == k
+    return x
+
+
+def simulate(n: int, policy: PlacementPolicy, topo: Topology,
+             cfg: ChurnConfig, *, waves: int, requests_per_wave: int) -> dict:
+    """One (env, n, policy) cell.  Same ``cfg.seed`` => bit-identical
+    event and request streams across policies (the RNG call sequence is
+    policy-independent; ranking is deterministic and RNG-free)."""
+    rng = np.random.default_rng(cfg.seed)
+    drng = random.Random(cfg.seed + 1)
+    delay = GeoDelay(topo)
+    state = RingState(_rand_ids(rng, n))
+    state.track_owner_diffs()
+    store = BlockStore(state, replication=R, policy=policy)
+
+    # admission: each session gets an origin node and a ring key; its KV
+    # block is placed AT the key, so session and block share a replica
+    # set (the serve plane's co-location invariant)
+    skeys = rng.integers(0, 2**64, size=SESSIONS, dtype=np.uint64)
+    ids = state.active_ids()
+    origins = ids[rng.integers(0, ids.size, size=SESSIONS)]
+    payload = bytes(BLOCK_BYTES)
+    owners = np.empty(SESSIONS, np.uint64)
+    for i in range(SESSIONS):
+        group = policy.replica_group(state, int(skeys[i]), R,
+                                     origin=int(origins[i]))
+        owners[i] = group[0]
+        store.put(f"kv/{i}", payload, at=int(skeys[i]))
+
+    # churn: §VII event rate 2n/S_avg over the metered window, spread
+    # evenly across the waves (joins and leaves in equal measure)
+    total_events = 2.0 * n / cfg.s_avg * cfg.duration
+    batch = max(2, int(round(total_events / waves)))
+    lat_ms: List[float] = []
+    migration_bytes = 0
+    migrations = 0
+    for _ in range(waves):
+        pick = rng.integers(0, SESSIONS, size=requests_per_wave)
+        for s in pick:
+            o, w = int(origins[s]), int(owners[s])
+            rtt = (delay.sample_pair(drng, o, w)
+                   + delay.sample_pair(drng, w, o))
+            lat_ms.append(rtt * 1e3)
+        v0 = state.active_version
+        live = state.active_ids()
+        leave = np.unique(live[rng.integers(0, live.size, size=batch // 2)])
+        join = _rand_ids(rng, batch - batch // 2)
+        evs = [Event(subject_id=int(p), kind="leave") for p in leave]
+        evs += [Event(subject_id=int(p), kind="join") for p in join]
+        state.apply_events(evs)
+        store.sync()                        # O(affected) block repair
+        diff = state.owner_diff(v0)
+        # owner_diff-driven re-rank, exactly the serve plane's rule: only
+        # affected (or orphaned) sessions are re-ranked, and a session
+        # stays put unless the policy's first pick moved off its holder
+        gone = ~np.isin(owners, state.active_ids())
+        for s in np.nonzero(diff.affected(skeys) | gone)[0]:
+            prefer = None if gone[s] else int(owners[s])
+            group = policy.replica_group(state, int(skeys[s]), R,
+                                         origin=int(origins[s]),
+                                         prefer=prefer)
+            if group[0] != owners[s]:
+                owners[s] = group[0]
+                migration_bytes += KV_MIGRATION_BYTES
+                migrations += 1
+
+    lat = np.asarray(lat_ms)
+    return {
+        "n": n, "policy": policy.name, "events_per_wave": batch,
+        "requests": int(lat.size),
+        "p50_ms": round(float(np.percentile(lat, 50)), 4),
+        "p99_ms": round(float(np.percentile(lat, 99)), 4),
+        "migrations": migrations,
+        "migration_bytes": migration_bytes,
+        "repair_bytes": store.repair_bytes,
+        "maintenance_bytes": store.repair_bytes + migration_bytes,
+    }
+
+
+def run(full: bool = False, *, out: str = "BENCH_placement.json",
+        sizes=None) -> List[dict]:
+    if sizes is None:
+        sizes = (10**3, 10**4, 10**5) if full else (10**3, 10**4)
+    waves = 20 if full else 10
+    rpw = 400 if full else 200
+    envs = [("lan", Topology.single_region()),
+            ("wan", Topology.multi_dc(4))]
+    results = []
+    for env, topo in envs:
+        policies = [RingSuccessor(),
+                    LatencyAware(topo, affinity_ms=5.0, tie_ms=0.5)]
+        for n in sizes:
+            cfg = ChurnConfig(n=n, s_avg=3600.0, duration=1800.0, seed=0)
+            for pol in policies:
+                row = simulate(n, pol, topo, cfg,
+                               waves=waves, requests_per_wave=rpw)
+                row["env"] = env
+                results.append(row)
+                emit(f"placement_{env}_n{n}_{pol.name}",
+                     row["p99_ms"] * 1e3,
+                     f"p50={row['p50_ms']}ms "
+                     f"maint={row['maintenance_bytes']}B")
+    payload = {
+        "bench": "placement",
+        "config": {"replication": R, "sessions": SESSIONS,
+                   "block_bytes": BLOCK_BYTES, "s_avg": 3600.0,
+                   "duration": 1800.0, "waves": waves,
+                   "requests_per_wave": rpw, "seed": 0},
+        "results": results,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated ring sizes, e.g. 1000,10000")
+    ap.add_argument("--out", default="BENCH_placement.json")
+    args = ap.parse_args()
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else None)
+    header()
+    run(full=args.full, out=args.out, sizes=sizes)
+
+
+if __name__ == "__main__":
+    main()

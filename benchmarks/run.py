@@ -4,18 +4,19 @@ the system hot paths (ring lookup, serve plane).
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig7,serve]
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py);
-``ring_lookup``, ``serve``, ``maintenance`` and ``latency`` additionally
-emit BENCH_ring_lookup.json / BENCH_serve.json / BENCH_maintenance.json
-/ BENCH_latency.json so future PRs can track the hot paths.
+``ring_lookup``, ``serve``, ``maintenance``, ``latency`` and
+``placement`` additionally emit BENCH_ring_lookup.json /
+BENCH_serve.json / BENCH_maintenance.json / BENCH_latency.json /
+BENCH_placement.json so future PRs can track the hot paths.
 """
 from __future__ import annotations
 
 import argparse
 
-from . import (bench_latency, bench_maintenance, bench_ring_lookup,
-               bench_serve, bench_tp, fig3_planetlab_bw, fig4_hpc_bw,
-               fig5_latency, fig7_analytical, fig8_quarantine, roofline,
-               table_validation)
+from . import (bench_latency, bench_maintenance, bench_placement,
+               bench_ring_lookup, bench_serve, bench_tp, fig3_planetlab_bw,
+               fig4_hpc_bw, fig5_latency, fig7_analytical, fig8_quarantine,
+               roofline, table_validation)
 from .common import header
 
 ALL = {
@@ -31,6 +32,7 @@ ALL = {
     "tp": bench_tp.run,
     "maintenance": bench_maintenance.run,
     "latency": bench_latency.run,
+    "placement": bench_placement.run,
 }
 
 

@@ -106,6 +106,34 @@ def _as_u64(ids: Iterable[int]) -> np.ndarray:
     return np.fromiter((int(i) for i in ids), dtype=np.uint64)
 
 
+@dataclass(frozen=True)
+class ReplicaView:
+    """Candidate metadata for one key's replica set — what a placement
+    policy (``repro.runtime.placement.PlacementPolicy``) ranks.
+
+    ``ids`` is the r-way successor list in RING order (owner first): a
+    policy may reorder it but never change the SET — the successor list
+    is the canonical, independently re-derivable location of the key's
+    replicas (readers and repair must be able to find them without
+    consulting the writer's policy).  ``ring_rank`` maps a candidate
+    back to its successor-list position (0 = primary), the tie-breaker
+    that keeps any rank-only policy deterministic; ``arc_dist`` is each
+    candidate's clockwise ring distance from the key (how "far" past
+    the owner the candidate sits — churn-sensitivity metadata: lower
+    arc_dist candidates lose the key to fewer distinct joiner arcs).
+    """
+
+    key: int
+    ids: Tuple[int, ...]
+    version: int                  # active-view version the view was cut at
+    n_active: int                 # active peers backing it (r is clamped)
+    arc_dist: Tuple[int, ...]
+
+    def ring_rank(self, node: int) -> int:
+        """Successor-list position of ``node`` (ValueError if absent)."""
+        return self.ids.index(node)
+
+
 class RingState:
     """Versioned, incrementally-maintained full routing table."""
 
@@ -490,6 +518,24 @@ class RingState:
         r = min(r, act.size)
         idx = (start + np.arange(r)) % act.size
         return [int(v) for v in act[idx]]
+
+    def replica_view(self, key, r: int) -> ReplicaView:
+        """``replica_set`` plus candidate metadata (ring ranks, arc
+        distances, view version) — the input a placement policy ranks.
+        The id ORDER is exactly ``replica_set``'s, so a consumer that
+        takes ``view.ids`` unranked behaves bit-identically to the
+        legacy successor-list loops."""
+        act = self.active_ids()
+        if not act.size:
+            raise LookupError("empty routing table")
+        from .ring import key_id
+        x = key if isinstance(key, int) else key_id(key)
+        ids = self.replica_set(x, r)
+        dist = tuple((int(i) - x) & 0xFFFFFFFFFFFFFFFF  # wraps the ring
+                     for i in ids)
+        return ReplicaView(key=int(x), ids=tuple(ids),
+                           version=self.active_version,
+                           n_active=int(act.size), arc_dist=dist)
 
     def replica_sets(self, keys, r: int) -> np.ndarray:
         """Vectorized ``replica_set`` over a key batch: (Q,) uint64 key

@@ -8,13 +8,13 @@ closed-form Figs-5/6 oracle; ``latency_sim`` is its measured twin
 from .calot_node import CalotPeer
 from .d1ht_node import D1HTPeer
 from .data import BlockMeta, BlockStore, PrefixCache, pack_array, unpack_array
-from .des import LanDelay, SimNet, WanDelay
+from .des import GeoDelay, LanDelay, SimNet, WanDelay
 from .experiment import ChurnConfig, ChurnResult, run_churn
 from .latency_sim import (ServiceProfile, latency_experiment,
                           measure_profile, measured_retry_fraction)
 
 __all__ = [
-    "CalotPeer", "D1HTPeer", "LanDelay", "SimNet", "WanDelay",
+    "CalotPeer", "D1HTPeer", "GeoDelay", "LanDelay", "SimNet", "WanDelay",
     "BlockMeta", "BlockStore", "PrefixCache", "pack_array", "unpack_array",
     "ChurnConfig", "ChurnResult", "run_churn",
     "ServiceProfile", "latency_experiment", "measure_profile",

@@ -110,13 +110,34 @@ class BlockMeta:
 
 
 class BlockStore:
-    """r-way replicated block store placed by the ring's successor lists."""
+    """r-way replicated block store placed by the ring's successor lists.
 
-    def __init__(self, state: RingState, *, replication: int = 2):
+    ``policy`` is an optional ``repro.runtime.placement.PlacementPolicy``
+    (duck-typed so the pure-Python DES users never import the runtime
+    package): it RANKS each key's replica set — which copy a read
+    prefers, which member a co-located consumer treats as primary — but
+    never changes the SET (the successor list stays the canonical,
+    policy-independent location of the copies, so ``sync``'s vectorized
+    re-replication resolves placement through ``replica_sets`` under any
+    policy).  ``None`` is exactly ring-successor order.
+
+    ``put(..., at=key)`` overrides the PLACEMENT key: the block is
+    stored under its own name but placed on ``at``'s replica set.  The
+    serve plane places every session KV block ``at`` the session's ring
+    key, so a session's blocks and the session itself land on the SAME
+    replica set — the migration target already holds the handoff blocks
+    locally instead of fetching them from wherever the block-name hash
+    happened to scatter them (and churn can no longer re-home the
+    session and its blocks to different replicas).
+    """
+
+    def __init__(self, state: RingState, *, replication: int = 2,
+                 policy=None):
         if replication < 1:
             raise ValueError("replication must be >= 1")
         self.state = state
         self.replication = replication
+        self.policy = policy
         # physical per-node stores: node id -> {key id -> (meta, value)}.
         # THIS is the ground truth the invariant suite twin-checks; the
         # indexes below are derived bookkeeping a real deployment would
@@ -124,6 +145,7 @@ class BlockStore:
         # coordinator last hand out?).
         self._nodes: Dict[int, Dict[int, Tuple[BlockMeta, bytes]]] = {}
         self._placement: Dict[int, Tuple[int, ...]] = {}   # key -> holders
+        self._pkey: Dict[int, int] = {}    # key -> placement-key override
         self._names: Dict[int, str] = {}                   # key -> debug name
         self._vclock: Dict[int, int] = {}    # coordinator version counter
         self._tombs: Dict[int, int] = {}     # key -> version buried at
@@ -172,16 +194,30 @@ class BlockStore:
             return None
         return entry
 
+    def _pkey_of(self, key: int) -> int:
+        return self._pkey.get(key, key)
+
     def _group(self, key: int) -> List[int]:
-        return [int(p) for p in self.state.replica_set(key, self.replication)]
+        pk = self._pkey_of(key)
+        if self.policy is None:
+            return [int(p) for p in self.state.replica_set(
+                pk, self.replication)]
+        return self.policy.replica_group(self.state, pk, self.replication)
 
     # -- core interface ------------------------------------------------------
-    def put(self, name, value: bytes) -> BlockMeta:
+    def put(self, name, value: bytes, *, at=None) -> BlockMeta:
         """Store ``value`` on every member of the key's replica set.
-        The new version supersedes every copy (and any tombstone)."""
+        The new version supersedes every copy (and any tombstone).
+        ``at`` (a key id or name) overrides the placement key — the
+        block keeps its own identity but lives on ``at``'s replica set
+        (session-KV co-location; see the class docstring)."""
         if not isinstance(value, bytes):
             raise TypeError("BlockStore values are bytes")
         key = self.key_of(name)
+        if at is not None:
+            self._pkey[key] = self.key_of(at)
+        else:
+            self._pkey.pop(key, None)
         group = self._group(key)
         version = max(self._vclock.get(key, 0), self._tombs.get(key, 0)) + 1
         meta = BlockMeta.of(version, value)
@@ -264,6 +300,7 @@ class BlockStore:
                 found = True
         if version:
             self._tombs[key] = version
+        self._pkey.pop(key, None)
         self._names.pop(key, None)
         self.removes += 1
         return found
@@ -291,7 +328,11 @@ class BlockStore:
             return stats
         diff = self.state.owner_diff(self._seen_version, target)
         keys = np.fromiter(self._placement, np.uint64, len(self._placement))
-        arc_hit = diff.affected(keys)
+        # arc membership is tested on the PLACEMENT keys: a co-located
+        # block moves exactly when its anchor's replica set moved
+        pkeys = np.fromiter((self._pkey_of(int(k)) for k in keys),
+                            np.uint64, keys.size) if self._pkey else keys
+        arc_hit = diff.affected(pkeys)
         live = set(int(x) for x in self.state.active_ids())
         affected: List[int] = []
         for k, hit in zip(keys.tolist(), arc_hit):
@@ -302,8 +343,12 @@ class BlockStore:
                 affected.append(k)
         stats["checked"] = len(affected)
         if affected:
+            # replica_sets is policy-independent by the set-preserving
+            # invariant: a policy ranks within the successor set, so the
+            # repair target SET is the same under any policy
             groups = self.state.replica_sets(
-                np.asarray(affected, np.uint64), self.replication)
+                np.asarray([self._pkey_of(k) for k in affected], np.uint64),
+                self.replication)
             for k, group_row in zip(affected, groups):
                 group = [int(g) for g in group_row]
                 self._replace(k, group, stats)
@@ -332,6 +377,7 @@ class BlockStore:
             # than replicas) — surface it, never serve a resurrected
             # tombstone or hang the placement index on a ghost
             del self._placement[key]
+            self._pkey.pop(key, None)
             self._names.pop(key, None)
             stats["lost"] += 1
             return

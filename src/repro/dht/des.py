@@ -9,6 +9,10 @@ routing-table transfers excluded).
 The two experimental environments of the paper map to delay models:
   * ``LanDelay``  — HPC datacenter (§VII-C/D): ~70 us one-way.
   * ``WanDelay``  — PlanetLab (§VII-B): lognormal, ~60 ms median one-way.
+  * ``GeoDelay``  — multi-datacenter generalization of both: endpoint-
+    aware, sampling each datagram around the per-region-pair medians of
+    a ``runtime.placement.Topology`` (intra-region = the LanDelay
+    regime, inter-region = the WanDelay lognormal regime).
 """
 from __future__ import annotations
 
@@ -30,6 +34,12 @@ from .messages import V_A_BITS, TrafficMeter
 class DelayModel(ABC):
     @abstractmethod
     def sample(self, rng: random.Random) -> float: ...
+
+    def sample_pair(self, rng: random.Random, src: int, dst: int) -> float:
+        """One-way delay for a specific (src, dst) datagram.  The base
+        models are endpoint-oblivious, so the default ignores the pair;
+        ``GeoDelay`` overrides it with per-region-pair distributions."""
+        return self.sample(rng)
 
 
 class LanDelay(DelayModel):
@@ -60,6 +70,63 @@ class WanDelay(DelayModel):
 
     def sample(self, rng: random.Random) -> float:
         return rng.lognormvariate(self.mu, self.sigma)
+
+
+class GeoDelay(DelayModel):
+    """Multi-datacenter delay keyed on a ``runtime.placement.Topology``
+    (duck-typed — no import, so the DHT package stays free of the
+    runtime package's accelerator deps).
+
+    This is the stochastic twin of the topology's deterministic RTT
+    estimator: each datagram samples around the SAME per-pair one-way
+    median the placement policy ranks by, so what ``LatencyAware``
+    optimizes is exactly what the DES measures.
+
+      * intra-region: shifted exponential (the ``LanDelay`` regime) with
+        mean = the topology's intra one-way estimate.  With
+        ``Topology.single_region()`` (0.14 ms RTT) this reproduces the
+        LanDelay default (70 us mean, 10 us floor) exactly.
+      * inter-region: lognormal (the ``WanDelay``/PlanetLab regime) with
+        median = the topology's inter-region one-way estimate.  A tighter
+        default sigma than WanDelay's 0.6: per-pair spread is residual
+        jitter, not the cross-pair spread the aggregate model folds in.
+    """
+
+    def __init__(self, topology, *, sigma: float = 0.25,
+                 floor: float = 10e-6):
+        self.topology = topology
+        self.sigma = float(sigma)
+        self.floor = float(floor)
+
+    def _intra_mean(self) -> float:
+        return max(self.topology.intra_rtt_ms * 0.5e-3, 2.0 * self.floor)
+
+    @property
+    def mean(self) -> float:
+        """Expected one-way delay (s) over uniformly random region pairs
+        — the hook ``core.churn.delay_mean_seconds`` duck-types on."""
+        names = self.topology.names
+        bump = math.exp(0.5 * self.sigma * self.sigma)  # lognormal mean/median
+        tot = 0.0
+        for a in names:
+            for b in names:
+                tot += (self._intra_mean() if a == b else
+                        self.topology.one_way_ms(a, b) * 1e-3 * bump)
+        return tot / (len(names) ** 2)
+
+    def sample(self, rng: random.Random) -> float:
+        # endpoint-oblivious fallback: a uniformly random region pair
+        names = self.topology.names
+        return self.sample_pair(rng, names[rng.randrange(len(names))],
+                                names[rng.randrange(len(names))])
+
+    def sample_pair(self, rng: random.Random, src, dst) -> float:
+        topo = self.topology
+        if topo._origin_index(src) == topo._origin_index(dst):
+            m = self._intra_mean()
+            return self.floor + rng.expovariate(1.0 / (m - self.floor))
+        return rng.lognormvariate(math.log(topo.one_way_ms(src, dst) * 1e-3),
+                                  self.sigma)
 
 
 # ---------------------------------------------------------------------------
@@ -149,7 +216,7 @@ class SimNet:
             m.send(bits, maintenance)
         if not self.is_alive(dst):
             return  # datagram lost; retransmission is the sender's problem
-        d = self.delay.sample(self.rng)
+        d = self.delay.sample_pair(self.rng, src, dst)
 
         def deliver() -> None:
             peer = self.peers.get(dst)

@@ -1,8 +1,10 @@
 from .elastic import ElasticController, MeshPlan
 from .failover import FailoverConfig, FailoverManager, ReplicaSupervisor
 from .membership import Membership, NodeInfo
-from .placement import Placement
+from .placement import (LatencyAware, Placement, PlacementPolicy,
+                        RingSuccessor, Topology)
 
 __all__ = ["ElasticController", "MeshPlan", "FailoverConfig",
            "FailoverManager", "ReplicaSupervisor", "Membership", "NodeInfo",
-           "Placement"]
+           "Placement", "PlacementPolicy", "RingSuccessor", "LatencyAware",
+           "Topology"]

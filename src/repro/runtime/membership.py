@@ -29,6 +29,8 @@ from repro.core.ring import RoutingTable, peer_id
 from repro.core.ringstate import RingState
 from repro.core.tuning import EdraParams
 
+from .placement import PlacementPolicy, RingSuccessor
+
 
 @dataclass
 class NodeInfo:
@@ -47,8 +49,13 @@ class Membership:
     RATE_MAX_SAMPLES = 4096
 
     def __init__(self, *, s_avg: float = 3600.0, f: float = 0.01,
-                 t_q: float = 600.0, now: Callable[[], float] = time.monotonic):
+                 t_q: float = 600.0, now: Callable[[], float] = time.monotonic,
+                 policy: Optional[PlacementPolicy] = None):
         self.now = now
+        # placement policy for §V gateway selection (and, via the serve
+        # plane, every replica-set ranking): default ring-successor order
+        # is bit-identical to the legacy active_ids()[:2] pick
+        self.policy = policy if policy is not None else RingSuccessor()
         self._event_times: deque = deque(maxlen=self.RATE_MAX_SAMPLES)
         # ONE RingState backs the facade table, the placement layer, and
         # the serving router's device-resident lookup table (DESIGN.md §4).
@@ -110,7 +117,10 @@ class Membership:
                      preemptible: bool = False) -> int:
         nid = peer_id(host, port)
         if preemptible:
-            gateways = [int(x) for x in self.ring_state.active_ids()[:2]]
+            # policy-ranked gateway pick (§V): under LatencyAware the
+            # joiner proxies through its lowest-RTT active peers instead
+            # of whoever happens to sort first in the id space
+            gateways = self.policy.gateways(self.ring_state, 2, origin=nid)
             # (re-)enqueue: a node restarting before T_q elapsed serves a
             # FRESH quarantine from now (§V — the old incarnation's
             # progress toward admission died with it)

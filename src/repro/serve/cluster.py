@@ -38,6 +38,7 @@ from repro.core.ringstate import _BUCKET_MIN_N
 from repro.dht.data import BlockStore, PrefixCache, pack_array, unpack_array
 from repro.models import Model
 from repro.runtime import Membership, ReplicaSupervisor
+from repro.runtime.placement import PlacementPolicy
 
 from .server import Replica, Request, SessionRouter, session_key
 
@@ -52,6 +53,11 @@ class SessionRecord:
     prompt: np.ndarray
     max_new_tokens: int
     owner: int = -1
+    # where the request physically came from (a node id or a Topology
+    # region name; None = no locality info) — the placement policy's
+    # ranking origin for this session's admission AND every later
+    # migration, so a re-home optimizes for the same client
+    origin: Optional[object] = None
     generated: List[int] = field(default_factory=list)
     migrations: int = 0
     done: bool = False
@@ -125,9 +131,16 @@ class ServeCluster:
                  kv_blocks: Optional[bool] = None,
                  prefix_cache: Optional[bool] = None,
                  block_store: Optional[BlockStore] = None,
-                 tp: int = 1, mesh=None):
+                 tp: int = 1, mesh=None,
+                 policy: Optional[PlacementPolicy] = None):
         self.membership = membership
         self.state = membership.ring_state
+        # every placement decision in the serve plane — admission spill,
+        # migration targets, stranded re-homes — ranks through ONE
+        # policy (DESIGN.md §13); default = the membership's policy (so
+        # gateways and the serve plane always agree), which itself
+        # defaults to RingSuccessor = the legacy successor-walk order
+        self.policy = policy if policy is not None else membership.policy
         self.model = model if decode_kernel is None else \
             dataclasses.replace(model, decode_use_kernel=decode_kernel)
         self.params = params
@@ -182,6 +195,12 @@ class ServeCluster:
         self.traces: Dict[str, RequestTrace] = {}
         self.proxied: Dict[int, int] = {}      # gateway node -> proxy count
         self.migrated_sessions = 0
+        # locality accounting: placements whose target sits in a
+        # different Topology region than the request's origin (only
+        # metered when the policy carries a topology and the request an
+        # origin — the geo demo/bench read these)
+        self.cross_region_admits = 0
+        self.cross_region_migrations = 0
         self.stranded = 0                  # handoff attempts deferred on
         # overlapped migration re-prefills in flight: sid -> target node
         self._pending_homes: Dict[str, Dict] = {}
@@ -201,7 +220,8 @@ class ServeCluster:
                 raise ValueError("kv_blocks needs a chunk-prefill family "
                                  "and a prefill_chunk size")
             self.blocks = block_store if block_store is not None else \
-                BlockStore(self.state, replication=replication)
+                BlockStore(self.state, replication=replication,
+                           policy=self.policy)
             if prefix_cache is None or prefix_cache:
                 self.prefix = PrefixCache(self.blocks,
                                           chunk=self.prefill_chunk,
@@ -347,13 +367,17 @@ class ServeCluster:
         return rep is not None and rec.session_id in rep.sessions
 
     # -- request intake --------------------------------------------------------
-    def submit(self, req: Request, *, via: Optional[int] = None) -> int:
+    def submit(self, req: Request, *, via: Optional[int] = None,
+               origin=None) -> int:
         """Admit a session and return its first generated token.
 
         ``via`` is the node the request physically arrived at.  A
         quarantined ``via`` node acts as a §V gateway: it forwards to the
         key's owner without ever owning the session (it is masked out of
-        the active view, so the lookup can never pick it)."""
+        the active view, so the lookup can never pick it).  ``origin``
+        (a node id or Topology region name; defaults to ``via``) is the
+        locality the placement policy optimizes for — it sticks to the
+        session, so migrations keep serving the same client."""
         if len(req.prompt) + req.max_new_tokens > self.max_len:
             # guarantees any mid-stream transcript (prompt + generated,
             # at most prompt + max_new - 1 tokens) re-prefills into a
@@ -361,13 +385,16 @@ class ServeCluster:
             raise ValueError("prompt + max_new_tokens exceeds max_len")
         if via is not None and self.state.is_quarantined(via):
             self.proxied[via] = self.proxied.get(via, 0) + 1
+        if origin is None:
+            origin = via
         t_sub = time.perf_counter_ns()
         key = session_key(req.session_id)
-        # host-side owner-first successor list (no device dispatch for a
-        # single key); admission spills down the replica_set exactly like
-        # migration does, so a hot arc fills its group before rejecting
-        group = [int(p) for p in self.state.replica_set(key,
-                                                        self.replication)]
+        # host-side policy-ranked replica group (no device dispatch for a
+        # single key); admission spills down the ranked group exactly
+        # like migration does, so a hot arc fills its group before
+        # rejecting — ring-successor order under the default policy
+        group = self.policy.replica_group(self.state, key,
+                                          self.replication, origin=origin)
         t_route = time.perf_counter_ns()
         cands = [n for n in group if self._has_capacity(n)]
         owner = cands[0] if cands else None
@@ -386,7 +413,8 @@ class ServeCluster:
                 self.prefix_affinity_hits += 1
         rec = SessionRecord(req.session_id, key, np.asarray(req.prompt,
                                                             np.int32),
-                            req.max_new_tokens, owner=owner)
+                            req.max_new_tokens, owner=owner, origin=origin)
+        self._note_region(rec, migration=False)
         t_queue = time.perf_counter_ns()
         tok = self._replica_for(owner).admit(req)
         self._note_warm(owner, rec.prompt)
@@ -400,6 +428,29 @@ class ServeCluster:
         self._export_session(rec)      # replicate the prompt's KV chunks
         self._push_token(rec, tok)
         return tok
+
+    # -- placement-policy plumbing --------------------------------------------
+    def _group_for(self, rec: "SessionRecord") -> List[int]:
+        """Policy-ranked replica group for a session's NEXT placement:
+        ranked from the session's recorded origin, with the current
+        owner as the affinity candidate (policies may discount it so
+        churn does not bounce a well-placed session; RingSuccessor
+        ignores both and reproduces the legacy successor walk)."""
+        return self.policy.replica_group(
+            self.state, rec.key, self.replication,
+            origin=rec.origin, prefer=rec.owner if rec.owner >= 0 else None)
+
+    def _note_region(self, rec: "SessionRecord", *, migration: bool) -> None:
+        topo = self.policy.topology
+        if topo is None or rec.origin is None:
+            return
+        if topo.region_of(rec.owner) != (
+                rec.origin if isinstance(rec.origin, str)
+                else topo.region_of(rec.origin)):
+            if migration:
+                self.cross_region_migrations += 1
+            else:
+                self.cross_region_admits += 1
 
     # -- prefix-affinity bookkeeping ------------------------------------------
     def _warm_candidate(self, prompt, cands: List[int]) -> Optional[int]:
@@ -453,11 +504,16 @@ class ServeCluster:
         full = int(rep.lengths[slot]) // c
         for j in range(rec.exported_chunks, full):
             # per-shard export: each device of a TP group ships only its
-            # kv_heads slice (one slab for single-device replicas)
+            # kv_heads slice (one slab for single-device replicas).
+            # Placed AT the session's ring key, not the block-name hash:
+            # the session and its blocks share ONE replica set, so the
+            # migration target the policy picks already holds the
+            # handoff blocks locally — BlockStore.sync() and migration
+            # can no longer re-home them to different replicas
             for s_i, slab in enumerate(
                     rep.export_block_shards(rec.session_id, j)):
                 self.blocks.put(self._block_name(rec.session_id, j, s_i),
-                                pack_array(slab))
+                                pack_array(slab), at=rec.key)
             self.exported_blocks += 1
         rec.exported_chunks = max(rec.exported_chunks, full)
 
@@ -648,8 +704,7 @@ class ServeCluster:
             self._rehome(rec)
 
     def _rehome(self, rec: SessionRecord) -> None:
-        group = [int(p) for p in self.state.replica_set(rec.key,
-                                                        self.replication)]
+        group = self._group_for(rec)
         try:
             self._handoff(rec, group)
         except RuntimeError:               # replica_set full right now
@@ -719,8 +774,7 @@ class ServeCluster:
                 continue    # an overlapped re-home is already in flight;
                 # _service_pending re-strands it if that target dies
             t0 = time.perf_counter_ns()
-            group = [int(p) for p in self.state.replica_set(
-                rec.key, self.replication)]
+            group = self._group_for(rec)
             trace = self.traces.get(rec.session_id)
             if trace is not None:
                 trace.route_us += (time.perf_counter_ns() - t0) / 1e3
@@ -784,6 +838,7 @@ class ServeCluster:
                 rec.owner = new_owner
                 rec.migrations += 1
                 self.migrated_sessions += 1
+                self._note_region(rec, migration=True)
                 return
             raise AssertionError("chunkable begin_admit returned a token")
         tok = rep.admit(req)
@@ -794,6 +849,7 @@ class ServeCluster:
         rec.owner = new_owner
         rec.migrations += 1
         self.migrated_sessions += 1
+        self._note_region(rec, migration=True)
         self._note_warm(new_owner, rec.prompt)
         self._push_token(rec, tok)
 
@@ -840,6 +896,7 @@ class ServeCluster:
         rec.owner = new_owner
         rec.migrations += 1
         self.migrated_sessions += 1
+        self._note_region(rec, migration=True)
         self._note_warm(new_owner, rec.prompt)
         self._push_token(rec, tok)
         return True
@@ -889,6 +946,11 @@ class ServeCluster:
             "route_upload_bytes": self.state.upload_bytes,
             "route_delta_uploads": self.state.delta_uploads,
         }
+        if self.policy.topology is not None:
+            out.update({
+                "cross_region_admits": self.cross_region_admits,
+                "cross_region_migrations": self.cross_region_migrations,
+            })
         if self.tp > 1:
             out.update({
                 "tp": self.tp,

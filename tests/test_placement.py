@@ -1,0 +1,520 @@
+"""Unified placement-policy layer (DESIGN.md §13, ISSUE 9).
+
+Acceptance properties:
+
+  * **Bit-identity of the default.**  ``RingSuccessor`` must reproduce
+    the pre-refactor ad-hoc successor loops exactly — replica groups,
+    §V gateway picks, serve-plane owners/tokens/proxy counts — under
+    hypothesis-driven churn streams (fixed-seed twins always run; the
+    hypothesis layer skips when the package is absent, as elsewhere in
+    this tree).
+  * **Set-preservation.**  Any policy's ``rank`` is a permutation of the
+    replica set, so ``BlockStore.sync``'s vectorized ``replica_sets``
+    repair stays policy-independent.
+  * **Proximity + affinity.**  ``LatencyAware`` prefers same-region
+    replica-set members, keeps a held placement within the affinity
+    hysteresis, and degenerates to exact ring order on a single-region
+    topology.
+  * **Co-location (ISSUE 9 satellite).**  A session's exported KV blocks
+    live on the SESSION's replica set, so the node a migration targets
+    already holds the handoff blocks.
+  * **GeoDelay** is the stochastic twin of the topology estimator and
+    reproduces LanDelay exactly in the single-region case.
+"""
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.edra import Event
+from repro.core.ringstate import RingState
+from repro.dht.data import BlockStore
+from repro.dht.des import GeoDelay, LanDelay, SimNet, WanDelay
+from repro.runtime import Membership
+from repro.runtime.placement import (LatencyAware, PlacementPolicy,
+                                     RingSuccessor, Topology)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _rand_ids(rng: np.random.Generator, k: int) -> np.ndarray:
+    x = rng.integers(0, 2**64, size=2 * k + 16, dtype=np.uint64)
+    x = np.unique(x)[:k]
+    assert x.size == k
+    return x
+
+
+def _churned_state(seed: int, n: int = 64, batches: int = 4) -> RingState:
+    """A ring that has LIVED: built, then churned through event batches."""
+    rng = np.random.default_rng(seed)
+    state = RingState(_rand_ids(rng, n))
+    for _ in range(batches):
+        live = state.active_ids()
+        leave = live[rng.integers(0, live.size, size=4)]
+        evs = [Event(subject_id=int(p), kind="leave") for p in np.unique(leave)]
+        evs += [Event(subject_id=int(p), kind="join")
+                for p in _rand_ids(rng, 4)]
+        state.apply_events(evs)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Topology
+# ---------------------------------------------------------------------------
+
+def test_topology_hash_assignment_deterministic_and_covering():
+    topo = Topology.multi_dc(4)
+    ids = _rand_ids(np.random.default_rng(0), 4096)
+    a = topo.region_index(ids)
+    b = topo.region_index(ids)
+    np.testing.assert_array_equal(a, b)
+    # every region gets a healthy share of a hash-assigned population
+    counts = np.bincount(a, minlength=4)
+    assert counts.min() > 4096 // 8, counts
+
+
+def test_topology_pinning_overrides_hash():
+    topo = Topology.multi_dc(3)
+    ids = _rand_ids(np.random.default_rng(1), 32)
+    topo.place(int(ids[5]), "eu-west")
+    topo.place(int(ids[9]), "us-east")
+    assert topo.region_of(int(ids[5])) == "eu-west"
+    assert topo.region_of(int(ids[9])) == "us-east"
+    # vectorized path agrees with the scalar one, pins included
+    idx = topo.region_index(ids)
+    for i, nid in enumerate(ids):
+        assert topo.names[idx[i]] == topo.region_of(int(nid))
+
+
+def test_topology_rtt_symmetric_and_consistent():
+    topo = Topology.multi_dc(4)
+    assert topo.rtt_ms("us-east", "eu-west") == topo.rtt_ms("eu-west",
+                                                            "us-east")
+    assert topo.rtt_ms("us-east", "us-east") == pytest.approx(
+        topo.intra_rtt_ms)
+    ids = _rand_ids(np.random.default_rng(2), 16)
+    many = topo.rtt_ms_many("us-east", ids)
+    for i, nid in enumerate(ids):
+        assert many[i] == pytest.approx(topo.rtt_ms("us-east", int(nid)))
+
+
+# ---------------------------------------------------------------------------
+# ReplicaView
+# ---------------------------------------------------------------------------
+
+def test_replica_view_matches_replica_set_with_increasing_arcs():
+    state = _churned_state(3)
+    rng = np.random.default_rng(4)
+    for key in rng.integers(0, 2**64, size=32, dtype=np.uint64):
+        view = state.replica_view(int(key), 3)
+        assert list(view.ids) == [int(p) for p in state.replica_set(
+            int(key), 3)]
+        assert view.n_active == state.active_ids().size
+        # successors are walked clockwise: arc distances strictly grow
+        assert all(a < b for a, b in zip(view.arc_dist, view.arc_dist[1:]))
+
+
+# ---------------------------------------------------------------------------
+# RingSuccessor bit-identity vs the pre-refactor inline oracles
+# ---------------------------------------------------------------------------
+
+def _assert_ring_successor_oracle(state: RingState, keys) -> None:
+    pol = RingSuccessor()
+    for key in keys:
+        # pre-refactor admission/migration/data-plane pick: the raw
+        # successor list, regardless of origin/prefer hints
+        want = [int(p) for p in state.replica_set(int(key), 2)]
+        assert pol.replica_group(state, int(key), 2) == want
+        assert pol.replica_group(state, int(key), 2, origin=want[0],
+                                 prefer=want[-1]) == want
+    # pre-refactor §V gateway pick: active_ids()[:2]
+    assert pol.gateways(state, 2) == [int(p) for p in state.active_ids()[:2]]
+
+
+def test_ring_successor_oracle_fixed_seed_churn_stream():
+    rng = np.random.default_rng(5)
+    for seed in range(6):
+        state = _churned_state(seed)
+        _assert_ring_successor_oracle(
+            state, rng.integers(0, 2**64, size=16, dtype=np.uint64))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1), n=st.integers(2, 40),
+           stream=st.lists(st.tuples(st.booleans(),
+                                     st.integers(0, 2**64 - 1)),
+                           max_size=24))
+    def test_ring_successor_oracle_hypothesis_churn_stream(seed, n, stream):
+        rng = np.random.default_rng(seed)
+        state = RingState(_rand_ids(rng, n))
+        for is_leave, x in stream:
+            if is_leave:
+                live = state.active_ids()
+                state.apply_events([Event(
+                    subject_id=int(live[x % live.size]), kind="leave")])
+                if not state.active_ids().size:     # never drain the ring
+                    state.apply_events([Event(subject_id=int(x) | 1,
+                                              kind="join")])
+            else:
+                state.apply_events([Event(subject_id=int(x), kind="join")])
+        _assert_ring_successor_oracle(
+            state, rng.integers(0, 2**64, size=8, dtype=np.uint64))
+
+
+def test_membership_gateway_pick_bit_identical_to_legacy():
+    """Two Membership twins fed the same join stream — default policy vs
+    an inline reimplementation of the legacy active_ids()[:2] pick —
+    record identical §V gateway sets for every quarantined joiner."""
+
+    class LegacyOracle(PlacementPolicy):
+        name = "legacy_oracle"
+
+        def rank(self, view, *, origin=None, prefer=None):
+            return list(view.ids)
+
+        def gateways(self, state, k, *, origin=None):
+            return [int(x) for x in state.active_ids()[:k]]
+
+    t = [0.0]
+    twins = [Membership(t_q=60.0, now=lambda: t[0]),
+             Membership(t_q=60.0, now=lambda: t[0],
+                        policy=LegacyOracle())]
+    for m in twins:
+        for i in range(12):
+            m.request_join(f"10.7.0.{i}", 7000 + i)
+        for i in range(6):
+            m.request_join(f"10.7.1.{i}", 7100 + i, preemptible=True)
+    a, b = (m.quarantine.pending for m in twins)
+    assert a.keys() == b.keys() and len(a) == 6
+    for nid in a:
+        assert a[nid].gateways == b[nid].gateways
+        assert len(a[nid].gateways) == 2
+
+
+# ---------------------------------------------------------------------------
+# LatencyAware
+# ---------------------------------------------------------------------------
+
+def test_latency_aware_is_set_preserving():
+    topo = Topology.multi_dc(4)
+    pol = LatencyAware(topo)
+    state = _churned_state(7)
+    rng = np.random.default_rng(8)
+    origins = state.active_ids()
+    for key in rng.integers(0, 2**64, size=64, dtype=np.uint64):
+        base = state.replica_set(int(key), 3)
+        origin = int(origins[rng.integers(0, origins.size)])
+        got = pol.replica_group(state, int(key), 3, origin=origin,
+                                prefer=int(base[-1]))
+        assert sorted(got) == sorted(int(p) for p in base)
+
+
+def test_latency_aware_prefers_same_region_and_ignores_missing_origin():
+    topo = Topology.multi_dc(2)
+    pol = LatencyAware(topo)
+    state = _churned_state(9)
+    rng = np.random.default_rng(10)
+    promoted = 0
+    for key in rng.integers(0, 2**64, size=128, dtype=np.uint64):
+        view = state.replica_view(int(key), 2)
+        assert pol.rank(view) == list(view.ids)      # no origin: ring order
+        for region in topo.names:
+            got = pol.rank(view, origin=region)
+            regions = [topo.region_of(p) for p in got]
+            if region in regions:
+                assert regions[0] == region          # nearest first
+                promoted += got[0] != view.ids[0]
+    assert promoted > 0      # the ranking actually reordered something
+
+
+def test_latency_aware_affinity_hysteresis():
+    """The discount pins the holder against any strictly-farther rival;
+    EQUAL-bucket rivals still win by ring order (deliberately — that tie
+    rule is what degenerates LatencyAware to RingSuccessor on LAN)."""
+    topo = Topology.multi_dc(4)
+    state = _churned_state(11)
+    rng = np.random.default_rng(12)
+    sticky = LatencyAware(topo, affinity_ms=1e6)
+    checked = 0
+    for key in rng.integers(0, 2**64, size=64, dtype=np.uint64):
+        view = state.replica_view(int(key), 3)
+        cand_regions = {topo.region_of(int(p)) for p in view.ids}
+        origin = next((nm for nm in topo.names if nm not in cand_regions),
+                      None)
+        if origin is None:       # every region holds a candidate: ties
+            continue             # possible, hysteresis not guaranteed
+        checked += 1
+        for held in view.ids:
+            # every rival is >= one inter-region hop from the origin, so
+            # the discounted holder's bucket is strictly best
+            assert sticky.rank(view, origin=origin, prefer=int(held))[0] \
+                == held
+        # a prefer hint OUTSIDE the candidate set must be ignored
+        assert sorted(sticky.rank(view, origin=origin, prefer=12345)) \
+            == sorted(view.ids)
+    assert checked > 8
+
+
+def test_latency_aware_degenerates_to_ring_order_on_single_region():
+    topo = Topology.single_region()
+    pol = LatencyAware(topo)
+    state = _churned_state(13)
+    rng = np.random.default_rng(14)
+    origins = state.active_ids()
+    for key in rng.integers(0, 2**64, size=64, dtype=np.uint64):
+        view = state.replica_view(int(key), 3)
+        origin = int(origins[rng.integers(0, origins.size)])
+        assert pol.rank(view, origin=origin) == list(view.ids)
+    assert pol.gateways(state, 2, origin=int(origins[0])) \
+        == [int(p) for p in state.active_ids()[:2]]
+
+
+def test_latency_aware_gateways_pick_low_rtt_actives():
+    topo = Topology.multi_dc(2)
+    pol = LatencyAware(topo)
+    state = _churned_state(15)
+    for region in topo.names:
+        gws = pol.gateways(state, 2, origin=region)
+        assert len(gws) == 2
+        best = topo.rtt_ms_many(region, state.active_ids()).min()
+        for g in gws:
+            assert topo.rtt_ms(region, g) == pytest.approx(best)
+
+
+# ---------------------------------------------------------------------------
+# BlockStore through a policy: set-preservation keeps repair invariant
+# ---------------------------------------------------------------------------
+
+def test_block_store_placement_set_policy_independent():
+    """The copies' LOCATION SET never depends on the policy (only the
+    preferred read order does) — so sync repair traffic is identical."""
+    rng = np.random.default_rng(16)
+    ids = _rand_ids(rng, 48)
+    topo = Topology.multi_dc(3)
+    stores = []
+    for pol in (None, RingSuccessor(), LatencyAware(topo)):
+        state = RingState(ids.copy())
+        s = BlockStore(state, replication=3, policy=pol)
+        for i in range(24):
+            s.put(f"blk/{i}", bytes([i]) * 64)
+            s.put(f"kv/{i}", bytes([i]) * 64, at=i * 7 + 1)
+        stores.append(s)
+    base = stores[0]
+    for s in stores[1:]:
+        for key, holders in base._placement.items():
+            assert sorted(s._placement[key]) == sorted(holders)
+    # and the co-located block really sits on its placement key's set
+    want = [int(p) for p in stores[0].state.replica_set(8, 3)]   # 1*7+1
+    assert sorted(base._placement[BlockStore.key_of("kv/1")]) == sorted(want)
+
+
+# ---------------------------------------------------------------------------
+# GeoDelay
+# ---------------------------------------------------------------------------
+
+def test_geo_delay_single_region_reproduces_lan_delay():
+    gd = GeoDelay(Topology.single_region())
+    lan = LanDelay()
+    assert gd.mean == pytest.approx(lan.mean)
+    r1, r2 = random.Random(42), random.Random(42)
+    for _ in range(64):
+        assert gd.sample_pair(r1, 1, 2) == pytest.approx(lan.sample(r2))
+
+
+def test_geo_delay_per_pair_medians_track_topology():
+    topo = Topology.multi_dc(4)
+    gd = GeoDelay(topo, sigma=0.25)
+    rng = random.Random(0)
+    for a, b in (("us-east", "eu-west"), ("us-east", "ap-south")):
+        xs = sorted(gd.sample_pair(rng, a, b) for _ in range(4001))
+        med = xs[2000]
+        assert med == pytest.approx(topo.one_way_ms(a, b) * 1e-3, rel=0.1)
+    # intra-region stays microseconds even on the WAN topology
+    nid = 7
+    other = next(i for i in range(8, 64)
+                 if topo.region_of(i) == topo.region_of(nid))
+    assert gd.sample_pair(rng, nid, other) < 1e-3
+
+
+def test_geo_delay_mean_supports_churn_duck_typing():
+    from repro.core.churn import delay_mean_seconds
+    topo = Topology.multi_dc(4)
+    gd = GeoDelay(topo, sigma=0.25)
+    assert delay_mean_seconds(gd) == pytest.approx(gd.mean)
+    # cross-check against the analytic pieces it is built from
+    bump = math.exp(0.5 * 0.25**2)
+    names = topo.names
+    want = sum((gd._intra_mean() if a == b
+                else topo.one_way_ms(a, b) * 1e-3 * bump)
+               for a in names for b in names) / len(names) ** 2
+    assert gd.mean == pytest.approx(want)
+    assert delay_mean_seconds(WanDelay()) == pytest.approx(
+        math.exp(math.log(0.060) + 0.6**2 / 2))
+
+
+def test_simnet_routes_through_sample_pair():
+    """SimNet.send samples the (src, dst) pair: datagrams between far
+    regions arrive tens of ms later than intra-region ones.  All sends
+    happen at t=0, so delivery times ARE the sampled one-way delays."""
+    from repro.dht.des import SimPeer
+
+    class Sink(SimPeer):
+        def __init__(self, pid, net):
+            super().__init__(pid, net)
+            self.alive = True
+            self.at = []
+
+        def start(self):                              # pragma: no cover
+            pass
+
+        def stop(self, *, crash):                     # pragma: no cover
+            self.alive = False
+
+        def on_datagram(self, src, kind, payload):
+            self.at.append(self.net.now)
+
+    topo = Topology.multi_dc(2)
+    # pin the test peers so the pairings are unambiguous
+    topo.place(1, "us-east"); topo.place(2, "us-east")
+    topo.place(3, "us-west")
+    delays = {}
+    for dst in (2, 3):
+        net = SimNet(GeoDelay(topo), seed=0)
+        net.peers.update({pid: Sink(pid, net) for pid in (1, dst)})
+        for _ in range(200):
+            net.send(1, dst, 1000, "ping", acked=False, maintenance=False)
+        net.run_until(10.0)
+        assert len(net.peers[dst].at) == 200
+        delays[dst] = float(np.median(net.peers[dst].at))
+    assert delays[2] < 1e-3                      # intra: LAN regime
+    assert delays[3] == pytest.approx(           # inter: topo median
+        topo.one_way_ms("us-east", "us-west") * 1e-3, rel=0.15)
+
+
+# ---------------------------------------------------------------------------
+# serve plane: co-location regression + twin-run bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+    cfg = get_smoke_config("qwen2.5-3b").with_overrides(dtype="float32")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _membership(n, t, policy=None):
+    m = Membership(t_q=60.0, now=lambda: t[0], policy=policy)
+    for i in range(n):
+        m.request_join(f"10.8.0.{i}", 7300 + i)
+    return m
+
+
+@pytest.mark.slow
+def test_session_blocks_resident_on_migration_target(smoke_model):
+    """ISSUE 9 consistency fix: exported KV blocks are placed AT the
+    session's ring key, so every chunk's holder set IS the session's
+    replica set — and when the owner dies, the surviving member the
+    policy promotes already holds the handoff blocks locally (asserted
+    directly against the pre-kill holder sets, plus zero fetch misses).
+    Pre-fix, blocks hashed to kv/<sid>/<j>'s OWN unrelated replica set
+    and migration handoffs fetched from third-party nodes."""
+    from repro.serve import Request, ServeCluster
+    cfg, model, params = smoke_model
+    t = [0.0]
+    m = _membership(5, t)
+    cluster = ServeCluster(m, model, params, slots=16, max_len=64,
+                           prefill_chunk=8)
+    assert cluster.blocks is not None
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        cluster.submit(Request(
+            f"p{i}", rng.integers(0, cfg.vocab, 10 + (i % 4) * 3,
+                                  dtype=np.int32), max_new_tokens=6))
+    store = cluster.blocks
+    assert cluster.exported_blocks > 0
+    holders_before = {}
+    for rec in cluster.sessions.values():
+        group = {int(p) for p in cluster.state.replica_set(
+            rec.key, cluster.replication)}
+        assert rec.owner in group
+        assert rec.exported_chunks > 0
+        for j in range(rec.exported_chunks):
+            key = store.key_of(cluster._block_name(rec.session_id, j))
+            held = set(store._placement[key])
+            assert held == group, (
+                f"{rec.session_id}/{j} stored on {held}, "
+                f"session replica set is {group}")
+            holders_before[(rec.session_id, j)] = held
+
+    by_owner = {}
+    for rec in cluster.sessions.values():
+        by_owner.setdefault(rec.owner, []).append(rec)
+    victim = max(by_owner, key=lambda o: len(by_owner[o]))
+    moved = list(by_owner[victim])
+    m.fail(victim)
+    assert cluster.handoffs >= 1
+    assert cluster.handoff_misses == 0
+    for rec in moved:
+        assert rec.owner != victim
+        for j in range(rec.exported_chunks):
+            assert rec.owner in holders_before[(rec.session_id, j)], (
+                f"{rec.session_id} migrated to a node that did not "
+                "already hold its KV chunks")
+    cluster.run()
+    assert all(rec.done for rec in cluster.sessions.values())
+
+
+@pytest.mark.slow
+def test_cluster_policy_plumbing_bit_identical_to_inline_oracle(smoke_model):
+    """Twin runs of one workload — churn, a quarantined §V gateway, a
+    node kill — under (a) the default policy and (b) an inline ring-
+    order oracle defined here: generated tokens, final owners, and
+    proxy counts must all be identical.  The policy layer added ZERO
+    behavior to the pre-refactor successor walks."""
+    from repro.serve import Request, ServeCluster
+    cfg, model, params = smoke_model
+
+    class InlineOracle(PlacementPolicy):
+        name = "inline_oracle"
+
+        def rank(self, view, *, origin=None, prefer=None):
+            return list(view.ids)
+
+        def gateways(self, state, k, *, origin=None):
+            return [int(x) for x in state.active_ids()[:k]]
+
+    def drive(policy):
+        t = [0.0]
+        m = _membership(6, t, policy=policy)
+        cluster = ServeCluster(m, model, params, slots=16, max_len=64,
+                               prefill_chunk=8)
+        rng = np.random.default_rng(5)
+        for i in range(9):
+            cluster.submit(Request(
+                f"s{i}", rng.integers(0, cfg.vocab, 6 + (i % 3) * 5,
+                                      dtype=np.int32), max_new_tokens=6))
+        q = m.request_join("10.8.9.9", 7999, preemptible=True)
+        cluster.submit(Request(
+            "via-gw", rng.integers(0, cfg.vocab, 7, dtype=np.int32),
+            max_new_tokens=6), via=q)
+        cluster.step()
+        m.fail(sorted(m.members())[0])
+        cluster.run()
+        return ({sid: rec.owner for sid, rec in cluster.sessions.items()},
+                {sid: list(rec.generated)
+                 for sid, rec in cluster.sessions.items()},
+                dict(cluster.proxied),
+                {nid: e.gateways for nid, e in m.quarantine.pending.items()})
+
+    assert drive(None) == drive(InlineOracle())
