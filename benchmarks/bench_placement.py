@@ -30,7 +30,7 @@ from __future__ import annotations
 import argparse
 import json
 import random
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

@@ -57,10 +57,16 @@ def time_best_of(fn: Callable, *, reps: int = 5, warmup: int = 1,
 
 def provenance(interpret: Optional[bool] = None) -> dict:
     """Mode/backend/autotune provenance block for BENCH_*.json files."""
+    from repro.analysis import sanitize
     from repro.kernels import autotune, backend
 
     p = backend.provenance(interpret)
     p["autotune"] = autotune.status_label()
+    # numbers taken with the runtime invariant sanitizer installed are
+    # NOT comparable to plain runs (every RingState/BlockStore/Replica
+    # mutation pays an extra oracle check) — record the flag so gates
+    # and readers can refuse the comparison
+    p["sanitize"] = sanitize.enabled()
     return p
 
 

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from .common import emit, provenance, time_best_of
 

@@ -1,0 +1,18 @@
+"""Correctness tooling: repro-lint static analysis + runtime sanitizer.
+
+* ``python -m repro.analysis`` — run the RL001–RL005 lint over the tree
+  and gate against the committed ``baseline.json`` ratchet (DESIGN.md
+  §14).
+* ``REPRO_SANITIZE=1`` + ``sanitize.install()`` — runtime invariant
+  wrappers over RingState / BlockStore / Replica (installed by
+  ``tests/conftest.py`` for the tier-1 suite).
+"""
+from .baseline import Baseline, Diff
+from .lint import RULES, Finding, LintReport, run_lint
+from .metering import is_metered, metered
+from .sanitize import SanitizeError
+
+__all__ = [
+    "Baseline", "Diff", "Finding", "LintReport", "RULES", "run_lint",
+    "metered", "is_metered", "SanitizeError",
+]

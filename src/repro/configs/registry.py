@@ -7,7 +7,7 @@ family (small depth/width/experts/vocab) for CPU tests.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from .base import ModelConfig, SHAPES, ShapeConfig
 

@@ -29,7 +29,7 @@ from typing import Dict
 
 import numpy as np
 
-from .tuning import DEFAULT_F, EdraParams, event_rate, rho, theta
+from .tuning import DEFAULT_F, event_rate, rho, theta
 
 V_M = 320   # D1HT/OneHop maintenance header bits
 V_C = 384   # 1h-Calot maintenance message bits (single event)

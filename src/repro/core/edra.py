@@ -33,7 +33,7 @@ against this module by tests/test_edra_theorems.py.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

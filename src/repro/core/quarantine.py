@@ -14,9 +14,8 @@ survives T_q (see repro.runtime.membership).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 DEFAULT_T_Q = 600.0  # 10 minutes — the paper's "convenient value"
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 import threading
 import queue as queue_mod
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

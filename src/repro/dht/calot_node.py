@@ -15,7 +15,7 @@ Per-peer bandwidth therefore follows Eq VII.1:
 from __future__ import annotations
 
 import bisect
-from typing import Optional, Tuple
+from typing import Optional
 
 from repro.core.edra import Event
 from repro.core.ring import RoutingTable

@@ -21,7 +21,7 @@ from repro.core.edra import Event, EventBuffer
 from repro.core.ring import RoutingTable, in_interval
 from repro.core.tuning import EdraParams
 from .des import SimNet, SimPeer
-from .messages import V_A_BITS, V_M_BITS, d1ht_maintenance_size
+from .messages import V_A_BITS, d1ht_maintenance_size
 
 
 class D1HTPeer(SimPeer):

@@ -21,9 +21,9 @@ import math
 import random
 from abc import ABC, abstractmethod
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List
 
-from repro.core.ring import RoutingTable, ring_distance
+from repro.core.ring import RoutingTable
 from .messages import V_A_BITS, TrafficMeter
 
 

@@ -10,8 +10,8 @@ the paper counts them:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Sequence
 
 from repro.core.edra import Event
 

@@ -15,7 +15,6 @@ import asyncio
 import socket
 import struct
 import time
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.core.edra import Event, EventBuffer

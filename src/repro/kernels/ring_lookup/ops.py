@@ -5,7 +5,6 @@ from functools import partial
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..backend import resolve_interpret
 from .kernel import (ring_lookup64_pallas, ring_lookup_bucketed_pallas,

@@ -35,7 +35,7 @@ from repro.configs import SHAPES, get_config
 from repro.configs.registry import ARCH_IDS, shape_cells, skipped_cells
 from repro.launch import hlo_cost, presets
 from repro.launch.inputs import batch_pspecs, input_specs
-from repro.launch.mesh import HARDWARE, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import Model
 from repro.optim import adamw
 from repro.sharding import specs as sh

@@ -19,10 +19,8 @@ closed-form FLOP counts in tests/test_hlo_cost.py.
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
-from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
 DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,

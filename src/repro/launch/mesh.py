@@ -7,7 +7,7 @@ any jax import; everything else sees the real device count.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Union
+from typing import List, Sequence, Union
 
 import jax
 import numpy as np

@@ -12,7 +12,6 @@ paths double as its oracle and as the dry-run lowering.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -25,7 +25,6 @@ which expert; on elastic events only the affected arc of experts moves).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax

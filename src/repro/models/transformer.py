@@ -8,14 +8,12 @@ Activation rematerialization is configurable (cfg.remat in
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.sharding.specs import shard
 from . import layers as L
 
 Params = Dict[str, Any]

@@ -34,6 +34,7 @@ from typing import Any, Dict, List, Optional, Set
 
 import numpy as np
 
+from repro.analysis.metering import metered
 from repro.core.ringstate import _BUCKET_MIN_N
 from repro.dht.data import BlockStore, PrefixCache, pack_array, unpack_array
 from repro.models import Model
@@ -587,13 +588,19 @@ class ServeCluster:
             return None
         return self.state.device_bucket_table()
 
+    @metered
     def _calibrate_route(self, rep: Replica, route) -> None:
         """One-time per-key cost of the on-device route, measured by
         timing the bucketized lookup standalone on this replica's key
         slab (warm trace, second call timed).  The fused round is ONE
         dispatch, so this is how the queue/route/decode trace splits
         survive fusion: the round's wall time is split into a route
-        share (this calibration x keys) and a decode share."""
+        share (this calibration x keys) and a decode share.
+
+        ``@metered``: the two block_until_ready syncs are the
+        measurement — repro-lint RL003 allowlists this site, and the
+        meter counter lets tests assert it stays out of the round loop
+        (one call per (replica, ring-version), never per round)."""
         import jax
         import jax.numpy as jnp
 

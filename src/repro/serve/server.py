@@ -117,11 +117,22 @@ def _jitted(model: Model) -> Tuple:
     bucketized ring lookup on the batch's session keys INSIDE the same
     program (the inner jitted wrapper inlines): one decode round =
     route + gather + decode in a single dispatch, returning the
-    (hi, lo) owner words next to the logits.  ``prefill_chunk`` is the
+    (hi, lo) owner words next to the tokens.  ``prefill_chunk`` is the
     fixed-shape continuation prefill segment (chunked prefill — every
     chunk of every admit shares one trace), or None for families
-    without a chunk path."""
+    without a chunk path.
+
+    Every decode variant returns the (B,) int32 GREEDY TOKENS, not the
+    (B, V) logits: the argmax rides inside the compiled program, so the
+    per-round host transfer is B int32 words instead of a full f32
+    logits slab (repro-lint RL003 — the readback was the decode loop's
+    hidden host sync).  Tensor-parallel groups keep returning logits
+    from ``TPReplicaGroup.fns`` (the head stays vocab-sharded there, so
+    the argmax needs the global array — see ``decode_round``)."""
     prefill = jax.jit(model.prefill)
+
+    def _pick(logits):
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
     def _index(lengths):
         # per-slot cache positions for transformer families; lockstep
@@ -132,7 +143,9 @@ def _jitted(model: Model) -> Tuple:
 
     @jax.jit
     def decode_full(params, cache, tokens, lengths):
-        return model.decode_step(params, cache, tokens, _index(lengths))
+        logits, new_cache = model.decode_step(params, cache, tokens,
+                                              _index(lengths))
+        return _pick(logits), new_cache
 
     @jax.jit
     def decode_slots(params, cache, tokens, lengths, idx):
@@ -144,7 +157,7 @@ def _jitted(model: Model) -> Tuple:
         logits, new_sub = model.decode_step(params, sub, tok, _index(ln))
         out_cache = jax.tree.map(
             lambda c, s: c.at[:, idx].set(s, mode="drop"), cache, new_sub)
-        return logits, out_cache
+        return _pick(logits), out_cache
 
     from repro.kernels.ring_lookup.ops import ring_lookup_bucketed
 
@@ -154,7 +167,7 @@ def _jitted(model: Model) -> Tuple:
         ohi, olo = ring_lookup_bucketed(khi, klo, bhi, blo, occ)
         logits, new_cache = model.decode_step(params, cache, tokens,
                                               _index(lengths))
-        return logits, new_cache, ohi, olo
+        return _pick(logits), new_cache, ohi, olo
 
     @jax.jit
     def decode_slots_fused(params, cache, tokens, lengths, idx,
@@ -170,7 +183,7 @@ def _jitted(model: Model) -> Tuple:
         logits, new_sub = model.decode_step(params, sub, tok, _index(ln))
         out_cache = jax.tree.map(
             lambda c, s: c.at[:, idx].set(s, mode="drop"), cache, new_sub)
-        return logits, out_cache, ohi, olo
+        return _pick(logits), out_cache, ohi, olo
 
     prefill_chunk = jax.jit(model.prefill_chunk) \
         if model.supports_chunked_prefill else None
@@ -571,12 +584,12 @@ class Replica:
             # (inactive rows decode garbage at position 0, as the slab
             # engine always did; admit rewrites the whole slot anyway)
             if route is not None:
-                logits, self.cache, ohi, olo = self._decode_full_fused(
+                out, self.cache, ohi, olo = self._decode_full_fused(
                     self.params, self.cache, jnp.asarray(self.tokens),
                     jnp.asarray(self.lengths), jnp.asarray(self.key_hi),
                     jnp.asarray(self.key_lo), *route)
             else:
-                logits, self.cache = self._decode_full(
+                out, self.cache = self._decode_full(
                     self.params, self.cache, jnp.asarray(self.tokens),
                     jnp.asarray(self.lengths))
             rows = act_idx
@@ -584,25 +597,38 @@ class Replica:
             idx = np.full(bucket, self.slots, np.int32)  # slots = OOB pad
             idx[:act_idx.size] = act_idx
             if route is not None:
-                logits, self.cache, ohi, olo = self._decode_slots_fused(
+                out, self.cache, ohi, olo = self._decode_slots_fused(
                     self.params, self.cache, jnp.asarray(self.tokens),
                     jnp.asarray(self.lengths), jnp.asarray(idx),
                     jnp.asarray(self.key_hi), jnp.asarray(self.key_lo),
                     *route)
             else:
-                logits, self.cache = self._decode_slots(
+                out, self.cache = self._decode_slots(
                     self.params, self.cache, jnp.asarray(self.tokens),
                     jnp.asarray(self.lengths), jnp.asarray(idx))
             rows = np.arange(act_idx.size)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        if self.group is not None:
+            # TP groups return vocab-SHARDED logits (models/tp.py keeps
+            # the head shard-local): the greedy pick needs the global
+            # array, so it runs here instead of inside the group program
+            out = jnp.argmax(out, axis=-1).astype(jnp.int32)
         row_of = {int(s): int(r) for s, r in zip(act_idx, rows)}
-        self.tokens[act_idx, 0] = nxt[rows]
-        self.lengths[act_idx] += 1
+        # the round's ONE mandatory device->host transfer: B int32
+        # tokens (plus the fused path's owner words) in a single
+        # device_get — logits never cross the host boundary
         if ohi is not None:
-            owners = (np.asarray(ohi).astype(np.uint64) << np.uint64(32)) \
-                | np.asarray(olo).astype(np.uint64)
+            # repro-lint: allow(RL003) the one mandatory per-round transfer
+            nxt, hi, lo = jax.device_get((out, ohi, olo))
+            owners = (hi.astype(np.uint64) << np.uint64(32)) \
+                | lo.astype(np.uint64)
             self.routed_owners = {sid: int(owners[row_of[slot]])
                                   for sid, slot in self.sessions.items()}
+        else:
+            # repro-lint: allow(RL003) the one mandatory per-round transfer
+            nxt = jax.device_get(out)
+        nxt = nxt.astype(np.int32, copy=False)
+        self.tokens[act_idx, 0] = nxt[rows]
+        self.lengths[act_idx] += 1
         return {sid: int(nxt[row_of[slot]])
                 for sid, slot in self.sessions.items()}
 

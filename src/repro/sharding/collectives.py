@@ -21,11 +21,10 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 # jax moved shard_map out of experimental and renamed check_rep ->
 # check_vma; support both so the EDRA collectives run on any jax >= 0.4.3x.

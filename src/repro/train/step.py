@@ -12,8 +12,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +22,6 @@ import jax.numpy as jnp  # noqa: F811 (re-export convenience)
 from repro.models import Model
 from repro.optim.adamw import OptConfig, apply_updates, init_state
 from repro.sharding import specs as sh_specs
-from repro.sharding.specs import shard
 
 
 @dataclass(frozen=True)

@@ -16,7 +16,6 @@ import pytest
 jnp = pytest.importorskip("jax.numpy")
 
 from repro.core import edra
-from repro.kernels.edra_tree.kernel import edra_tree_pallas
 from repro.kernels.edra_tree.ops import edra_tree
 from repro.kernels.edra_tree.ref import tree_math
 

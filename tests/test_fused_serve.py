@@ -286,3 +286,36 @@ def test_failed_overlapped_migration_restrands_and_recovers(smoke_model):
     assert rec.done and rec.migrations >= 2    # initial + post-failure
     want = _reference_tokens(model, params, rec.prompt, 10, 64)
     assert rec.generated == want
+
+# ---------------------------------------------------------------------------
+# repro-lint RL003 regression: greedy argmax lives INSIDE the program
+# ---------------------------------------------------------------------------
+
+def test_decode_argmax_is_fused_into_the_program(smoke_model, monkeypatch):
+    """Regression (repro-lint RL003): the per-round greedy pick must
+    ride inside the compiled decode program — the host sees only the B
+    int32 token transfer, never a (B, V) logits readback.  Warm the
+    bucket's trace, then poison host-side ``jnp.argmax``: decode rounds
+    must keep producing the reference stream without ever calling it."""
+    cfg, model, params = smoke_model
+    rng = np.random.default_rng(29)
+    prompts = [rng.integers(0, cfg.vocab, 5, dtype=np.int32)
+               for _ in range(3)]
+    rep = Replica(model, slots=4, max_len=48)
+    rep.attach_params(params)
+    streams = {f"a{i}": [rep.admit(Request(f"a{i}", p))]
+               for i, p in enumerate(prompts)}
+    for sid, tok in rep.decode_round().items():    # warm this bucket's trace
+        streams[sid].append(tok)
+
+    def poisoned(*a, **kw):
+        raise AssertionError("host-side jnp.argmax in the decode loop")
+
+    monkeypatch.setattr(jnp, "argmax", poisoned)
+    for _ in range(4):
+        for sid, tok in rep.decode_round().items():
+            streams[sid].append(tok)
+    monkeypatch.undo()
+    for i, p in enumerate(prompts):
+        want = _reference_tokens(model, params, p, 6, 48)
+        assert streams[f"a{i}"] == want

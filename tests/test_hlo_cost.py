@@ -1,7 +1,6 @@
 """Loop-aware HLO cost analyzer vs closed-form FLOP counts."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.launch.hlo_cost import analyze
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
-from repro.configs.base import SHAPES, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.launch.inputs import dummy_batch, input_specs
 from repro.models import Model
 

@@ -1,0 +1,469 @@
+"""repro-lint (RL001-RL005) + baseline ratchet + runtime sanitizer.
+
+Each rule gets a positive fixture (must flag) and a clean twin (must
+not); the ratchet tests pin the new/baselined/stale semantics; the CLI
+tests pin the exit codes the CI gate relies on; the sanitizer tests
+corrupt each invariant and expect ``SanitizeError``.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Baseline, run_lint
+from repro.analysis import sanitize
+from repro.analysis.metering import metered, meter_count, reset_meters
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _write(root: Path, rel: str, code: str) -> Path:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(code)
+    return p
+
+
+def _rules_of(report):
+    return sorted({f.rule for f in report.findings})
+
+
+# ---------------------------------------------------------------------------
+# rule fixtures: positive must flag, clean twin must not
+# ---------------------------------------------------------------------------
+
+RL001_BAD = """\
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def relu_branchy(x):
+    if x > 0:
+        return x
+    return jnp.zeros_like(x)
+"""
+
+RL001_OK = """\
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+@jax.jit
+def relu(x):
+    return jnp.where(x > 0, x, jnp.zeros_like(x))
+
+@partial(jax.jit, static_argnames=("n",))
+def tiled(x, n):
+    if n > 4:                 # static arg: python branch is fine
+        return x * 2
+    return x
+
+@jax.jit
+def guarded(x, h0=None):
+    if h0 is None:            # identity test on a maybe-tracer is fine
+        return x
+    return x + h0
+"""
+
+RL002_BAD = """\
+import numpy as np
+import jax.numpy as jnp
+
+def upload(xs):
+    n = len(xs)
+    buf = np.zeros(n, np.int32)
+    return jnp.asarray(buf)
+"""
+
+RL002_OK = """\
+import numpy as np
+import jax.numpy as jnp
+from repro.kernels.autotune import shape_bucket
+
+def upload(xs):
+    n = shape_bucket(len(xs))
+    buf = np.zeros(n, np.int32)
+    return jnp.asarray(buf)
+
+def upload_chunked(xs, c):
+    padded = (len(xs) + c - 1) // c * c   # round-to-multiple idiom
+    buf = np.zeros(padded, np.int32)
+    return jnp.asarray(buf)
+"""
+
+RL003_BAD = """\
+import numpy as np
+import jax.numpy as jnp
+
+def decode_round(cache, tokens):
+    logits = jnp.ones((4, 8)) * tokens
+    return np.asarray(logits)
+"""
+
+RL003_OK = """\
+import numpy as np
+import jax.numpy as jnp
+from repro.analysis.metering import metered
+
+def decode_round(cache, tokens):
+    toks = jnp.argmax(jnp.ones((4, 8)) * tokens, axis=-1)
+    # repro-lint: allow(RL003) the one mandatory per-round transfer
+    return np.asarray(toks)
+
+@metered
+def calibrate(route):
+    import jax
+    jax.block_until_ready(route)
+"""
+
+RL004_REF_BAD = """\
+from jax.experimental import pallas as pl
+
+def oracle(x):
+    return x
+"""
+
+RL005_BAD = """\
+import random
+from datetime import datetime
+
+def jitter():
+    return random.random() + datetime.now().timestamp()
+"""
+
+RL005_OK = """\
+import random
+import numpy as np
+
+def jitter(seed):
+    rng = random.Random(seed)
+    return rng.random() + float(np.random.default_rng(seed).random())
+"""
+
+
+def test_rl001_flags_tracer_branch_and_spares_clean_twin(tmp_path):
+    _write(tmp_path, "bad.py", RL001_BAD)
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert _rules_of(rep) == ["RL001"]
+    assert rep.findings[0].scope == "relu_branchy"
+    _write(tmp_path, "bad.py", RL001_OK)
+    assert run_lint([tmp_path], root=tmp_path).findings == []
+
+
+def test_rl001_reaches_through_the_call_graph(tmp_path):
+    _write(tmp_path, "deep.py", """\
+import jax
+
+def helper(x):
+    while x.sum() > 0:
+        x = x - 1
+    return x
+
+@jax.jit
+def entry(x):
+    return helper(x)
+""")
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert [f.rule for f in rep.findings] == ["RL001"]
+    assert rep.findings[0].scope == "helper"
+
+
+def test_rl002_flags_unbucketed_dynamic_shape(tmp_path):
+    _write(tmp_path, "bad.py", RL002_BAD)
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert _rules_of(rep) == ["RL002"]
+    _write(tmp_path, "bad.py", RL002_OK)
+    assert run_lint([tmp_path], root=tmp_path).findings == []
+
+
+def test_rl002_flags_dynamic_scalar_into_static_argname(tmp_path):
+    _write(tmp_path, "bad.py", """\
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+@partial(jax.jit, static_argnames=("n",))
+def kernel(x, n):
+    return x[:4] * n
+
+def caller(xs):
+    m = len(xs)
+    return kernel(jnp.ones(4), n=m)
+""")
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert _rules_of(rep) == ["RL002"]
+    assert "static argname" in rep.findings[0].message
+
+
+def test_rl003_flags_hot_path_sync_and_honours_allowlists(tmp_path):
+    _write(tmp_path, "serve/hot.py", RL003_BAD)
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert _rules_of(rep) == ["RL003"]
+    assert rep.findings[0].scope == "decode_round"
+    # same syncs under pragma + @metered: clean, but counted suppressed
+    _write(tmp_path, "serve/hot.py", RL003_OK)
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert rep.findings == []
+    assert len(rep.suppressed) == 1
+    # the SAME file outside serve/ is not hot-path at all
+    _write(tmp_path, "serve/hot.py", "")
+    _write(tmp_path, "offline.py", RL003_BAD)
+    assert run_lint([tmp_path], root=tmp_path).findings == []
+
+
+def test_rl004_kernel_contract(tmp_path):
+    # missing ref.py
+    _write(tmp_path, "kernels/foo/kernel.py",
+           "from repro.kernels.autotune import tiles_for\n")
+    _write(tmp_path, "kernels/foo/ops.py", "def op(x):\n    return x\n")
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert any("missing" in f.message and f.rule == "RL004"
+               for f in rep.findings)
+    # pallas-importing ref.py
+    _write(tmp_path, "kernels/foo/ref.py", RL004_REF_BAD)
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert any("imports pallas" in f.message for f in rep.findings)
+    # hard-coded tiles
+    _write(tmp_path, "kernels/foo/ref.py", "def oracle(x):\n    return x\n")
+    _write(tmp_path, "kernels/foo/kernel.py", "TILE = 128\n")
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert any("tiles_for" in f.message for f in rep.findings)
+    # complete, contract-clean triple
+    _write(tmp_path, "kernels/foo/kernel.py",
+           "from repro.kernels.autotune import tiles_for\n")
+    assert run_lint([tmp_path], root=tmp_path).findings == []
+
+
+def test_rl005_determinism_in_sim_planes(tmp_path):
+    _write(tmp_path, "dht/node.py", RL005_BAD)
+    rep = run_lint([tmp_path], root=tmp_path)
+    assert {f.rule for f in rep.findings} == {"RL005"}
+    assert len(rep.findings) == 2          # unseeded RNG + wall clock
+    _write(tmp_path, "dht/node.py", RL005_OK)
+    assert run_lint([tmp_path], root=tmp_path).findings == []
+    # the same code OUTSIDE dht/-core/ is not a sim plane
+    _write(tmp_path, "dht/node.py", "")
+    _write(tmp_path, "tools/node.py", RL005_BAD)
+    assert run_lint([tmp_path], root=tmp_path).findings == []
+
+
+# ---------------------------------------------------------------------------
+# baseline ratchet semantics
+# ---------------------------------------------------------------------------
+
+def test_baseline_new_fails_baselined_passes_fixed_prunes(tmp_path):
+    _write(tmp_path, "dht/node.py", RL005_BAD)
+    first = run_lint([tmp_path], root=tmp_path)
+    bl = Baseline.from_findings(first.findings)
+
+    # baselined: same findings pass the gate
+    diff = bl.diff(first.findings)
+    assert diff.ok and len(diff.baselined) == 2 and not diff.stale
+
+    # new: an extra offender fails even though the legacy ones pass
+    _write(tmp_path, "dht/other.py", RL005_BAD)
+    diff = bl.diff(run_lint([tmp_path], root=tmp_path).findings)
+    assert not diff.ok
+    assert len(diff.new) == 2 and len(diff.baselined) == 2
+
+    # fixed: offenders gone -> gate passes and entries go stale
+    _write(tmp_path, "dht/node.py", RL005_OK)
+    _write(tmp_path, "dht/other.py", "")
+    diff = bl.diff(run_lint([tmp_path], root=tmp_path).findings)
+    assert diff.ok and len(diff.stale) == 2
+
+    # --update-baseline prunes: the ratchet only shrinks
+    pruned = Baseline.from_findings(run_lint([tmp_path],
+                                             root=tmp_path).findings)
+    assert sum(pruned.counts.values()) == 0
+
+
+def test_baseline_keys_are_line_independent(tmp_path):
+    _write(tmp_path, "dht/node.py", RL005_BAD)
+    bl = Baseline.from_findings(run_lint([tmp_path], root=tmp_path).findings)
+    # shift every finding down 3 lines: still baselined, nothing new
+    _write(tmp_path, "dht/node.py", "\n\n\n" + RL005_BAD)
+    diff = bl.diff(run_lint([tmp_path], root=tmp_path).findings)
+    assert diff.ok and not diff.stale
+
+
+def test_baseline_save_load_roundtrip(tmp_path):
+    _write(tmp_path, "dht/node.py", RL005_BAD)
+    bl = Baseline.from_findings(run_lint([tmp_path], root=tmp_path).findings)
+    bl.save(tmp_path / "baseline.json")
+    assert Baseline.load(tmp_path / "baseline.json").counts == bl.counts
+    assert Baseline.load(tmp_path / "missing.json").counts == {}
+
+
+# ---------------------------------------------------------------------------
+# CLI: the exact exit codes the CI gate scripts rely on
+# ---------------------------------------------------------------------------
+
+def _cli(*args, cwd=REPO):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True)
+
+
+@pytest.mark.parametrize("rule,rel,code", [
+    ("RL001", "bad.py", RL001_BAD),
+    ("RL002", "bad.py", RL002_BAD),
+    ("RL003", "serve/hot.py", RL003_BAD),
+    ("RL004", "kernels/foo/ops.py", "def op(x):\n    return x\n"),
+    ("RL005", "dht/node.py", RL005_BAD),
+])
+def test_cli_exits_nonzero_on_each_seeded_violation(tmp_path, rule, rel,
+                                                    code):
+    _write(tmp_path, rel, code)
+    res = _cli(str(tmp_path), "--root", str(tmp_path), "--no-baseline")
+    assert res.returncode == 1, res.stdout + res.stderr
+    assert rule in res.stdout
+
+
+def test_cli_exits_zero_on_the_committed_tree():
+    """The committed tree must be clean against the committed baseline —
+    this IS the CI static-analysis gate, run in-process by the suite so
+    a PR can never land a new finding even if CI config regresses."""
+    res = _cli()
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_cli_update_baseline_writes_and_gate_then_passes(tmp_path):
+    _write(tmp_path, "dht/node.py", RL005_BAD)
+    bl = tmp_path / "bl.json"
+    res = _cli(str(tmp_path), "--root", str(tmp_path),
+               "--baseline", str(bl), "--update-baseline")
+    assert res.returncode == 0 and bl.exists()
+    res = _cli(str(tmp_path), "--root", str(tmp_path), "--baseline", str(bl))
+    assert res.returncode == 0
+    assert "2 baselined" in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# metering decorator
+# ---------------------------------------------------------------------------
+
+def test_metered_counts_calls():
+    reset_meters()
+
+    @metered
+    def probe(x):
+        return x * 2
+
+    assert probe(3) == 6 and probe(4) == 8
+    assert meter_count(probe) == 2
+    assert getattr(probe, "__repro_metered__", False)
+    reset_meters()
+    assert meter_count(probe) == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer: corrupt each invariant, expect SanitizeError
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def sanitized():
+    owned = sanitize.install()     # False if conftest already installed
+    yield
+    if owned:
+        sanitize.uninstall()
+
+
+def _ring(n=16):
+    from repro.core.ringstate import RingState
+    return RingState(range(100, 100 + n))
+
+
+def test_sanitizer_clean_ring_ops_pass(sanitized):
+    st = _ring()
+    st.add(7)
+    st.set_quarantined(7, True)
+    st.remove(7)
+    assert sanitize.stats().get("ringstate", 0) >= 3
+    import numpy as np
+    out = st.lookup(np.asarray([5, 1000, 10**12], np.uint64))
+    assert out.size == 3
+    assert sanitize.stats().get("ringstate.lookup", 0) >= 1
+
+
+def test_sanitizer_catches_unsorted_ring_slab(sanitized):
+    st = _ring()
+    st._ids[0], st._ids[1] = st._ids[1], st._ids[0]    # corrupt order
+    with pytest.raises(sanitize.SanitizeError, match="sorted"):
+        st.add(7)
+
+
+def test_sanitizer_catches_version_regression(sanitized):
+    st = _ring()
+    st.active_version = st.version + 10                # corrupt monotone
+    with pytest.raises(sanitize.SanitizeError, match="version"):
+        st.add(7)
+
+
+def test_sanitizer_catches_short_replica_group(sanitized):
+    from repro.dht.data import BlockStore
+
+    class ShortPolicy:
+        def replica_group(self, state, key, r):
+            return [int(state.active_ids()[0])]        # 1 < r copies
+
+    st = _ring(8)
+    store = BlockStore(st, replication=2, policy=ShortPolicy())
+    with pytest.raises(sanitize.SanitizeError, match="placed on 1"):
+        store.put("blk", b"payload")
+
+
+def test_sanitizer_catches_tombstone_resurrection(sanitized):
+    from repro.dht.data import BlockStore
+    st = _ring(8)
+    store = BlockStore(st, replication=2)
+    store.put("keep", b"v1")
+    key = store.key_of("keep")
+    store._tombs[key] = 99                  # corrupt: placed AND buried
+    with pytest.raises(sanitize.SanitizeError, match="tombstoned"):
+        store.put("other", b"v2")
+
+
+def test_sanitizer_clean_store_churn_passes(sanitized):
+    from repro.dht.data import BlockStore
+    st = _ring(8)
+    store = BlockStore(st, replication=2)
+    store.put("a", b"x" * 32)
+    store.put("b", b"y" * 32)
+    st.remove(int(store._placement[store.key_of("a")][0]))
+    store.sync()
+    store.remove("b")
+    assert sanitize.stats().get("blockstore.sync", 0) >= 1
+    assert sanitize.stats().get("blockstore.remove", 0) >= 1
+
+
+def test_sanitizer_catches_replica_slot_leak(sanitized):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import Model
+    from repro.serve import Replica
+    cfg = get_smoke_config("qwen2.5-3b").with_overrides(dtype="float32")
+    model = Model(cfg)
+    rep = Replica(model, slots=4, max_len=32)
+    rep.attach_params(model.init(jax.random.PRNGKey(0)))
+    rep._free.pop()                                    # leak a slot
+    with pytest.raises(sanitize.SanitizeError, match="slot leak"):
+        rep.evict("no-such-session")
+
+
+def test_sanitizer_install_is_idempotent_and_reversible():
+    from repro.core.ringstate import RingState
+    pre = RingState.add
+    owned = sanitize.install()
+    try:
+        assert getattr(RingState.add, "__repro_sanitized__", False)
+        assert sanitize.install() is False             # second install: no-op
+    finally:
+        if owned:
+            sanitize.uninstall()
+            assert RingState.add is pre

@@ -2,12 +2,12 @@
 import numpy as np
 import pytest
 
-from repro.core.edra import Event
 from repro.runtime import (ElasticController, FailoverConfig,
                            FailoverManager, Membership, Placement)
 
 
-def _mk(n=32, t=[0.0]):
+def _mk(n=32, t=None):
+    t = [0.0] if t is None else t
     m = Membership(t_q=60.0, now=lambda: t[0])
     for i in range(n):
         m.request_join(f"10.0.0.{i}", 7000 + i)

@@ -3,7 +3,6 @@ import subprocess
 import sys
 
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.sharding import specs as sh
 

@@ -8,7 +8,6 @@ import pytest
 
 from repro import ckpt as ckpt_lib
 from repro.configs import get_smoke_config
-from repro.configs.base import ShapeConfig
 from repro.data import SyntheticLM, DataConfig
 from repro.models import Model
 from repro.optim import adamw
